@@ -1,0 +1,25 @@
+"""Paper Fig. 1 analog: local-routine efficiency vs block size on this
+host, plus the fitted EfficiencyCurve parameters used by the CPU-host
+performance model."""
+
+import json
+import sys
+
+
+def main() -> dict:
+    from repro.core.calibration import bench_routines, fit_efficiency
+    sizes = (128, 256, 512, 1024)
+    bench = bench_routines(sizes)
+    peak = max(bench["dgemm"].values())
+    out = {"peak_gflops": peak / 1e9, "routines": {}}
+    for rout, vals in bench.items():
+        curve = fit_efficiency(vals, peak)
+        out["routines"][rout] = {
+            "gflops": {str(k): v / 1e9 for k, v in vals.items()},
+            "eff_max": curve.eff_max, "n0": curve.n0,
+        }
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

@@ -1,0 +1,17 @@
+"""Paper Fig. 2 analog: LogP ping between two JAX devices -> (L, beta).
+Runs under --xla_force_host_platform_device_count>=2 (see common.py)."""
+
+import json
+
+
+def main() -> dict:
+    from repro.core.calibration import bench_ping, fit_alpha_beta
+    ping = bench_ping(sizes_words=(1 << 10, 1 << 14, 1 << 18, 1 << 21, 1 << 23))
+    L, beta = fit_alpha_beta(ping)
+    return {"latency_s": L, "beta_s_per_word": beta,
+            "bandwidth_GBps": 8.0 / beta / 1e9,
+            "ping": {str(k): v for k, v in ping.items()}}
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

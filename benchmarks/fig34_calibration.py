@@ -1,0 +1,44 @@
+"""Paper Figs. 3-4 analog: contention calibration factors.
+
+Two sources, reported side by side:
+* measured — all p host devices ppermute simultaneously at distance d;
+  factor = wall / ideal (the C_max-style observation; an SPMD jit exposes
+  only the slowest rank, exactly the paper's "synchronized" case);
+* simulated — the torus link-load model (Hopper-like 3D torus and a v5e
+  2D pod), which also supplies C_avg and extends to p we cannot host.
+"""
+
+import json
+
+
+def main() -> dict:
+    import jax
+    from repro.core.calibration import (bench_contention, bench_ping,
+                                        fit_alpha_beta, hopper_like_simulator,
+                                        v5e_pod_simulator)
+    n = len(jax.devices())
+    ping = bench_ping(sizes_words=(1 << 18, 1 << 21))
+    L, beta = fit_alpha_beta(ping)
+    words = 1 << 20
+    ideal = L + beta * words
+    measured = {}
+    for d in (1, 2, n // 2):
+        wall = bench_contention(n, d, words=words)
+        measured[str(d)] = wall / ideal
+    sim_h = hopper_like_simulator()
+    sim_v = v5e_pod_simulator()
+    sim = {}
+    for name, s, ps in (("hopper3d", sim_h, (64, 1024, 4096)),
+                        ("v5e2d", sim_v, (16, 64, 256))):
+        rows = {}
+        for d in (1, 4, 16, 32):
+            for p in ps:
+                cavg, cmax = s.factors(p, d)
+                rows[f"p{p}_d{d}"] = {"c_avg": cavg, "c_max": cmax}
+        sim[name] = rows
+    return {"measured_factor_vs_distance": measured,
+            "ideal_s": ideal, "simulated": sim}
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

@@ -1,0 +1,69 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) three-term table + dominant-bottleneck identification."""
+
+import glob
+import json
+import os
+
+from .common import ART
+
+
+def load_cells(mesh: str = "pod", base: str = None):
+    base = base or os.path.join(ART, "dryrun")
+    cells = []
+    for f in sorted(glob.glob(os.path.join(base, mesh, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | useful | roofline frac | GB/dev | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for c in cells:
+        ma = c.get("memory_analysis", {})
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_term']:.3g} | "
+            f"{c['memory_term']:.3g} | {c['collective_term']:.3g} | "
+            f"{c['dominant']} | {c['model_flops']:.3g} | "
+            f"{c['useful_flops_fraction']:.2f} | "
+            f"{c['roofline_fraction']:.3f} | "
+            f"{ma.get('total_bytes', 0)/1e9:.1f} | "
+            f"{'y' if c.get('fits_hbm') else 'n'} |")
+    return "\n".join(lines)
+
+
+def main() -> dict:
+    out = {}
+    for mesh in ("pod", "multipod"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        out[mesh] = {
+            "n_cells": len(cells),
+            "dominant_counts": {},
+            "worst_fraction": None,
+            "most_collective_bound": None,
+        }
+        for c in cells:
+            d = c["dominant"]
+            out[mesh]["dominant_counts"][d] = \
+                out[mesh]["dominant_counts"].get(d, 0) + 1
+        trains = [c for c in cells if c["kind"] == "train"]
+        if trains:
+            worst = min(trains, key=lambda c: c["roofline_fraction"])
+            out[mesh]["worst_fraction"] = (
+                f"{worst['arch']}@{worst['shape']}",
+                worst["roofline_fraction"])
+            collb = max(trains, key=lambda c: c["collective_term"]
+                        / max(c["compute_term"], 1e-12))
+            out[mesh]["most_collective_bound"] = (
+                f"{collb['arch']}@{collb['shape']}",
+                collb["collective_term"] / max(collb["compute_term"], 1e-12))
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))
+    print(markdown_table(load_cells("pod")))

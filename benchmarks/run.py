@@ -1,0 +1,170 @@
+"""Benchmark harness — one entry per paper table/figure + the TPU-side
+roofline/dry-run aggregates.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1 tables ...]
+
+Multi-device benches run in subprocesses with their own
+--xla_force_host_platform_device_count (the main process stays 1-device).
+Results are also written to artifacts/bench/*.json.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from benchmarks.common import ART, emit, run_subprocess_bench  # noqa: E402
+
+OUT = os.path.join(ART, "bench")
+
+
+def _save(name: str, obj: dict):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def bench_fig1():
+    t0 = time.perf_counter()
+    from benchmarks.fig1_blas_efficiency import main as fig1
+    res = fig1()
+    _save("fig1", res)
+    emit("fig1_blas_efficiency", (time.perf_counter() - t0) * 1e6,
+         f"peak={res['peak_gflops']:.1f}GF "
+         f"dgemm_effmax={res['routines']['dgemm']['eff_max']:.2f}")
+
+
+def bench_fig2():
+    t0 = time.perf_counter()
+    res = run_subprocess_bench("benchmarks.fig2_alpha_beta", n_devices=2)
+    _save("fig2", res)
+    emit("fig2_alpha_beta", (time.perf_counter() - t0) * 1e6,
+         f"L={res['latency_s']:.2e}s bw={res['bandwidth_GBps']:.2f}GB/s")
+
+
+def bench_fig34():
+    t0 = time.perf_counter()
+    res = run_subprocess_bench("benchmarks.fig34_calibration", n_devices=8)
+    _save("fig34", res)
+    m = res["measured_factor_vs_distance"]
+    emit("fig34_calibration", (time.perf_counter() - t0) * 1e6,
+         "measured_factors=" + ";".join(f"d{k}:{v:.2f}" for k, v in m.items()))
+
+
+def bench_fig5to8():
+    t0 = time.perf_counter()
+    res = run_subprocess_bench("benchmarks.fig5to8_validation", n_devices=9)
+    _save("fig5to8", res)
+    emit("fig5to8_validation", (time.perf_counter() - t0) * 1e6,
+         f"geo_err_cal={res['geomean_rel_err_cal']:.2f} "
+         f"geo_err_nocal={res['geomean_rel_err_nocal']:.2f}")
+
+
+def bench_tables():
+    t0 = time.perf_counter()
+    from benchmarks.tables_2to5_predictions import main as tables
+    res = tables()
+    _save("tables_2to5", res)
+    cl = res["claims"]
+    emit("tables_2to5_predictions", (time.perf_counter() - t0) * 1e6,
+         f"best_variant_agreement={cl['best_variant_agreement']:.2f} "
+         f"crossover_cannon={cl['crossover_cannon']} "
+         f"crossover_trsm={cl['crossover_trsm']}")
+    for algo, rep in res["validation"].items():
+        emit(f"table_validation_{algo}", 0.0,
+             f"heldout_rel={rep['geo_mean_rel_err']:.1%} "
+             f"mean_abs={rep['mean_abs_pct_points']:.2f}pts")
+
+
+def bench_roofline():
+    t0 = time.perf_counter()
+    from benchmarks.roofline_table import load_cells, main as roof
+    res = roof()
+    _save("roofline", res)
+    for mesh, agg in res.items():
+        emit(f"roofline_{mesh}", (time.perf_counter() - t0) * 1e6,
+             f"cells={agg['n_cells']} dominant={agg['dominant_counts']} "
+             f"worst={agg['worst_fraction']}")
+    for c in load_cells("pod"):
+        if c["kind"] == "train":
+            emit(f"roofline_cell_{c['arch']}@{c['shape']}", 0.0,
+                 f"compute={c['compute_term']:.3g}s "
+                 f"collective={c['collective_term']:.3g}s "
+                 f"frac={c['roofline_fraction']:.3f}")
+
+
+def bench_lm_model():
+    from repro.configs import SHAPES, get
+    from repro.core.lm_model import predict_train_step
+    rows = {}
+    for arch in ("qwen1.5-110b", "arctic-480b", "granite-20b"):
+        t0 = time.perf_counter()
+        cfg = get(arch)
+        est = predict_train_step(cfg, SHAPES["train_4k"],
+                                 {"data": 16, "model": 16},
+                                 fsdp=cfg.param_count() * 2 / 16 > 4e9)
+        rows[arch] = est.to_dict()
+        emit(f"lm_model_{arch}", (time.perf_counter() - t0) * 1e6,
+             f"step={est.total_overlapped:.3f}s compute={est.compute_s:.3f}s "
+             f"coll={est.collective_s:.3f}s")
+    _save("lm_model", rows)
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import cholesky, matmul, trsm
+    rng = np.random.default_rng(0)
+    n = 512
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    u = jnp.asarray(np.triu(rng.standard_normal((n, n))) + 40 * np.eye(n),
+                    jnp.float32)
+    spd = jnp.asarray(np.asarray(a) @ np.asarray(a).T + n * np.eye(n),
+                      jnp.float32)
+    for name, fn, args in (("matmul", matmul, (a, a)),
+                           ("trsm", trsm, (u, a)),
+                           ("cholesky", cholesky, (spd,))):
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        emit(f"kernel_{name}_interpret_n{n}", (time.perf_counter() - t0) * 1e6,
+             "interpret-mode (CPU validation; TPU is the target)")
+
+
+BENCHES = {
+    "fig1": bench_fig1,
+    "fig2": bench_fig2,
+    "fig34": bench_fig34,
+    "fig5to8": bench_fig5to8,
+    "tables": bench_tables,
+    "roofline": bench_roofline,
+    "lm_model": bench_lm_model,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            emit(f"{name}_FAILED", 0.0, repr(e)[:120])
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's workflow in 30 lines.
+
+1. Build a performance model for a machine (Hopper constants, fitted
+   calibration), 2. ask it which algorithm variant to run for a scenario,
+3. run the *executable* counterpart on this machine's devices and watch the
+   ranking hold.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import AlgoContext, CommModel, ComputeModel, HOPPER
+from repro.core.calibration import hopper_fitted_ctx
+from repro.core.predictor import best_variant, format_table, prediction_table
+
+
+def main():
+    # The fitted Hopper model (calibration recovered from the paper's
+    # published Cannon table; cached in artifacts/)
+    ctx = hopper_fitted_ctx()
+
+    print("=== Which matmul variant should I run? (paper §VI-B) ===")
+    for cores in (1536, 24576, 393216):
+        p = cores // HOPPER.threads_per_unit
+        choices = best_variant(ctx, "cannon", 32768, p)
+        best = min(choices, key=lambda v: choices[v].result.total)
+        print(f"  {cores:>7} cores -> {best:10s} "
+              f"(est {choices[best].result.total:.2f}s, "
+              f"{choices[best].pct_peak:.1f}% of peak)")
+
+    print("\n=== Predicted %-of-peak table (Table II analog) ===")
+    tbl = prediction_table(ctx, "cannon", [32768], [1536, 6144, 24576])
+    print(format_table(tbl, "cannon"))
+
+    print("\n=== The same question for an LLM on a TPU pod (beyond-paper) ===")
+    from repro.configs import SHAPES, get
+    from repro.core.lm_model import sharding_tradeoff_table
+    tbl = sharding_tradeoff_table(get("qwen1.5-110b"), SHAPES["train_4k"],
+                                  chips=256)
+    for name, row in sorted(tbl.items(), key=lambda kv: kv[1]["step_s"])[:5]:
+        print(f"  {name:16s} step={row['step_s']:7.2f}s "
+              f"compute={row['compute_s']:6.2f}s "
+              f"coll={row['collective_s']:6.2f}s "
+              f"params/chip={row['param_gb_per_chip']:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""--arch config module; canonical definition in registry.py."""
+
+from .registry import WHISPER_TINY
+
+CONFIG = WHISPER_TINY

@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: contention-calibrated performance
+models for distributed dense linear algebra (and, beyond the paper, for LM
+train/serve steps on TPU meshes).
+
+Layout:
+  machine.py      machine constants (Hopper Cray XE6, TPU v5e, CPU host)
+  perfmodel.py    alpha-beta + calibration-factor primitives (paper §IV)
+  collectives.py  analytic collective models (paper §V)
+  algorithms.py   the 16 algorithm-variant models (paper §V)
+  calibration.py  portable benchmarks + fitting (paper §IV, Figs. 1-4)
+  predictor.py    variant selection + prediction tables (paper §VI)
+  roofline.py     3-term TPU roofline from compiled HLO (§Roofline)
+  hlo.py          structural HLO parsing (trip-count-corrected costs)
+  lm_model.py     the methodology applied to LM steps (beyond-paper)
+"""
+
+from .machine import CPU_HOST, HOPPER, MACHINES, TPU_V5E, Machine
+from .perfmodel import (CalibrationTable, CommModel, ComputeModel,
+                        EfficiencyCurve, IdentityCalibration,
+                        ParametricCalibration)
+from .algorithms import (ALGOS, VARIANTS, AlgoContext, ModelResult, evaluate,
+                         pct_of_peak)
+from .predictor import best_variant, prediction_table, select
+
+__all__ = [
+    "CPU_HOST", "HOPPER", "MACHINES", "TPU_V5E", "Machine",
+    "CalibrationTable", "CommModel", "ComputeModel", "EfficiencyCurve",
+    "IdentityCalibration", "ParametricCalibration",
+    "ALGOS", "VARIANTS", "AlgoContext", "ModelResult", "evaluate",
+    "pct_of_peak", "best_variant", "prediction_table", "select",
+]

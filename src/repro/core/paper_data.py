@@ -1,0 +1,86 @@
+"""Published data from the paper, used for fitting and validation.
+
+Tables II-V: predicted percentage-of-peak on Hopper for each algorithm x
+variant over core counts {1536, 6144, 24576, 98304, 393216} and two matrix
+sizes.  (The paper's own model outputs — our reproduction target.)
+"""
+
+from __future__ import annotations
+
+CORE_COUNTS = (1536, 6144, 24576, 98304, 393216)
+VARIANTS = ("2d", "2d_ovlp", "2.5d", "2.5d_ovlp")
+
+# {algo: {size: {variant: (pct at each of CORE_COUNTS)}}}
+PAPER_TABLES = {
+    "cannon": {  # Table II
+        32768: {
+            "2d": (67.95, 35.42, 12.87, 4.57, 1.30),
+            "2d_ovlp": (83.69, 59.88, 15.33, 4.93, 1.35),
+            "2.5d": (53.63, 35.95, 21.56, 9.37, 3.94),
+            "2.5d_ovlp": (55.56, 37.96, 27.80, 10.55, 4.19),
+        },
+        65536: {
+            "2d": (72.36, 50.20, 22.59, 8.71, 2.78),
+            "2d_ovlp": (80.40, 73.20, 30.73, 9.78, 2.91),
+            "2.5d": (64.52, 48.22, 34.51, 17.04, 7.55),
+            "2.5d_ovlp": (65.91, 50.95, 45.78, 21.04, 8.32),
+        },
+    },
+    "summa": {  # Table III
+        32768: {
+            "2d": (52.29, 24.98, 10.46, 4.01, 1.27),
+            "2d_ovlp": (68.59, 27.85, 12.02, 4.29, 1.33),
+            "2.5d": (49.18, 30.28, 16.44, 7.93, 3.56),
+            "2.5d_ovlp": (46.65, 34.74, 19.71, 8.75, 3.77),
+        },
+        65536: {
+            "2d": (62.43, 38.82, 18.92, 8.75, 3.62),
+            "2d_ovlp": (66.47, 58.69, 24.28, 9.83, 3.84),
+            "2.5d": (61.19, 43.54, 27.67, 14.68, 7.75),
+            "2.5d_ovlp": (55.19, 43.37, 38.51, 17.51, 8.56),
+        },
+    },
+    "trsm": {  # Table IV
+        65536: {
+            "2d": (43.40, 21.04, 8.70, 3.33, 1.24),
+            "2d_ovlp": (39.85, 21.50, 9.84, 3.60, 1.29),
+            "2.5d": (41.37, 24.20, 10.94, 4.42, 1.38),
+            "2.5d_ovlp": (44.16, 28.00, 13.16, 4.79, 1.43),
+        },
+        131072: {
+            "2d": (56.10, 33.49, 15.87, 6.85, 2.87),
+            "2d_ovlp": (49.62, 32.39, 17.10, 7.88, 3.06),
+            "2.5d": (55.58, 38.01, 20.12, 9.13, 3.11),
+            "2.5d_ovlp": (57.89, 42.03, 26.06, 10.59, 3.29),
+        },
+    },
+    "cholesky": {  # Table V
+        65536: {
+            "2d": (32.29, 15.02, 5.64, 1.89, 0.56),
+            "2d_ovlp": (32.29, 19.71, 6.82, 2.01, 0.57),
+            "2.5d": (21.02, 11.68, 4.73, 1.83, 0.59),
+            "2.5d_ovlp": (21.81, 12.51, 5.01, 1.87, 0.61),
+        },
+        131072: {
+            "2d": (46.88, 18.44, 6.36, 4.67, 1.66),
+            "2d_ovlp": (58.26, 26.19, 8.79, 5.45, 1.74),
+            "2.5d": (29.86, 14.78, 6.47, 4.29, 1.76),
+            "2.5d_ovlp": (30.72, 15.96, 6.60, 4.29, 1.83),
+        },
+    },
+}
+
+# Headline qualitative claims (paper §VI-B) used as validation assertions:
+# 1. Cannon/SUMMA/Cholesky: at small core counts 2D_ovlp wins; at large core
+#    counts 2.5D_ovlp wins (a crossover exists within the studied range).
+# 2. TRSM: 2.5D_ovlp is best at every studied core count... (Table IV shows
+#    2D best at 1536 for 65536? No: 44.16 (2.5d_ovlp) > 43.40 (2d) — best
+#    everywhere indeed, matching the text.)
+# 3. est_Cal ranks variants correctly; est_NoCal does not (Figs. 5-8).
+CLAIMED_CROSSOVER = {"cannon": True, "summa": True, "cholesky": True, "trsm": False}
+
+
+def table_best_variant(algo: str, size: int, cores: int) -> str:
+    idx = CORE_COUNTS.index(cores)
+    row = PAPER_TABLES[algo][size]
+    return max(row, key=lambda v: row[v][idx])

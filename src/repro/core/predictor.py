@@ -1,0 +1,135 @@
+"""Variant selection and prediction tables (paper §VI).
+
+The paper's headline application: given a machine, an algorithm, a problem
+size and a core count, evaluate the models for every variant (2D / 2.5D,
+with/without overlapping, over the legal replication factors ``c`` and
+block-cyclic factors ``r``) and pick the fastest — including the memory
+constraint that 2.5D replication must fit ("our models ... can take into
+account runtime constraints (e.g., available memory)").
+
+``prediction_table`` reproduces the structure of paper Tables II-V
+(percentage-of-peak for each variant over a grid of core counts and sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, Optional, Sequence
+
+from .algorithms import ALGOS, VARIANTS, AlgoContext, ModelResult, evaluate, pct_of_peak
+
+#: matrices resident per algorithm (A,B,C for matmul; X/B + U for trsm; A for chol)
+_MATRICES = {"cannon": 3.0, "summa": 3.0, "trsm": 2.0, "cholesky": 1.0}
+
+
+def _fits_memory(ctx: AlgoContext, algo: str, n: int, p: int, c: int) -> bool:
+    words = _MATRICES[algo] * float(n) * n * c / p
+    return words * ctx.comm.machine.word_bytes <= ctx.comp.machine.mem_per_unit
+
+
+def legal_c_values(p: int, *, max_c: Optional[int] = None) -> list[int]:
+    """Replication factors: powers of two with c <= p^(1/3) (Solomonik's
+    bound: beyond that, the reduction cost dominates) and p/c a perfect
+    square (grid constraint)."""
+    out = []
+    cap = max_c or int(round(p ** (1.0 / 3.0)))
+    c = 2
+    while c <= cap:
+        g = math.sqrt(p / c)
+        if abs(g - round(g)) < 1e-9:
+            out.append(c)
+        c *= 2
+    return out or [2]
+
+
+@dataclasses.dataclass
+class VariantChoice:
+    result: ModelResult
+    pct_peak: float
+
+
+def best_variant(ctx: AlgoContext, algo: str, n: int, p: int,
+                 variants: Sequence[str] = VARIANTS,
+                 r_values: Sequence[int] = (1, 2, 4),
+                 max_c: Optional[int] = None) -> Dict[str, VariantChoice]:
+    """Evaluate every variant, tuning (c, r); returns {variant: best choice}."""
+    out: Dict[str, VariantChoice] = {}
+    needs_r = algo in ("trsm", "cholesky")
+    for variant in variants:
+        candidates = []
+        cs = [1] if variant.startswith("2d") else legal_c_values(p, max_c=max_c)
+        rs = r_values if needs_r else (1,)
+        for c in cs:
+            if variant.startswith("2.5d") and not _fits_memory(ctx, algo, n, p, c):
+                continue
+            for r in rs:
+                res = evaluate(ctx, algo, variant, n, p, c=c, r=r)
+                candidates.append(res)
+        if not candidates:  # no c fits: fall back to smallest c (paper notes OOM limits)
+            candidates = [evaluate(ctx, algo, variant, n, p, c=2, r=rs[0])]
+        best = min(candidates, key=lambda res: res.total)
+        out[variant] = VariantChoice(best, pct_of_peak(ctx, best))
+    return out
+
+
+def select(ctx: AlgoContext, algo: str, n: int, p: int, **kw) -> VariantChoice:
+    """The tuner entry point: the single fastest variant for the scenario."""
+    choices = best_variant(ctx, algo, n, p, **kw)
+    return max(choices.values(), key=lambda ch: ch.pct_peak)
+
+
+def prediction_table(ctx: AlgoContext, algo: str,
+                     sizes: Iterable[int], core_counts: Iterable[int],
+                     threads_per_process: Optional[int] = None,
+                     **kw) -> Dict[int, Dict[int, Dict[str, float]]]:
+    """Paper Tables II-V: {n: {cores: {variant: pct_of_peak}}}.
+
+    ``core_counts`` are physical cores; processes p = cores / threads_per_unit
+    (Hopper runs one process per NUMA domain).
+    """
+    tpp = threads_per_process or ctx.comp.machine.threads_per_unit
+    table: Dict[int, Dict[int, Dict[str, float]]] = {}
+    for n in sizes:
+        table[n] = {}
+        for cores in core_counts:
+            p = max(1, cores // tpp)
+            choices = best_variant(ctx, algo, n, p, **kw)
+            # %-peak is vs *total cores* peak, as the paper reports.
+            row = {}
+            for variant, ch in choices.items():
+                from .algorithms import USEFUL_FLOPS
+                flops = USEFUL_FLOPS[algo](n)
+                peak = cores * ctx.comp.machine.peak_flops_per_thread
+                row[variant] = 100.0 * flops / (ch.result.total * peak)
+            table[n][cores] = row
+    return table
+
+
+def format_table(table, algo: str) -> str:
+    lines = [f"# predicted %-of-peak — {algo}"]
+    for n, by_cores in table.items():
+        lines.append(f"  size n={n}")
+        lines.append("    cores     " + "  ".join(f"{v:>11}" for v in VARIANTS))
+        for cores, row in by_cores.items():
+            best = max(row.values())
+            cells = []
+            for v in VARIANTS:
+                mark = "*" if abs(row[v] - best) < 1e-12 else " "
+                cells.append(f"{row[v]:>10.2f}{mark}")
+            lines.append(f"    {cores:>8}  " + "  ".join(cells))
+    return "\n".join(lines)
+
+
+def crossover_core_count(ctx: AlgoContext, algo: str, n: int,
+                         core_counts: Sequence[int],
+                         threads_per_process: Optional[int] = None) -> Optional[int]:
+    """Smallest core count where 2.5D+overlap beats 2D+overlap — the paper's
+    'sweet spot' (§VI-B).  None if no crossover in the range."""
+    tpp = threads_per_process or ctx.comp.machine.threads_per_unit
+    for cores in sorted(core_counts):
+        p = max(1, cores // tpp)
+        ch = best_variant(ctx, algo, n, p)
+        if ch["2.5d_ovlp"].result.total < ch["2d_ovlp"].result.total:
+            return cores
+    return None

@@ -1,0 +1,4 @@
+"""Distribution utilities: logical-axis sharding rules, overlap helpers."""
+
+from .sharding import (constrain, param_spec, tree_param_specs,
+                       tree_shardings, use_mesh)

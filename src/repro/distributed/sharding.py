@@ -1,0 +1,284 @@
+"""Logical-axis sharding rules.
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"heads", "ff", "vocab", "experts", ...); this module maps them onto the
+physical mesh axes and applies with_sharding_constraint when a mesh is
+active (set by the launcher / dry-run).  Without an active mesh every
+constraint is a no-op, so the same model code runs single-device tests.
+
+Parameter shardings are derived from leaf names via ``param_spec`` —
+Megatron-style TP over 'model', experts over 'model' (EP), vocab over
+'model'; the data/pod axes only ever shard the batch and optimizer state
+(ZeRO-1, see training/optimizer.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> mesh axis (or tuple); None = replicated
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": None,
+    "seq_shard": "data",          # long-context sequence parallelism
+    "dmodel": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": None,
+    "state": None,
+    "frames": None,
+    "kv_seq": "model",            # decode KV-cache sequence dim
+    "zero": ("data",),            # axes ZeRO-shards optimizer state over
+}
+
+
+def mesh_axes(mesh) -> set:
+    return set(mesh.shape.keys())
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, rules: Optional[dict] = None):
+    """Activate (mesh, rules) for constrain()/param_spec() below."""
+    prev = getattr(_state, "ctx", None)
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    # drop references to axes the mesh doesn't have (single-pod: no 'pod')
+    names = mesh_axes(mesh)
+
+    def fix(v):
+        if isinstance(v, tuple):
+            t = tuple(a for a in v if a in names)
+            return t if t else None
+        return v if (v is None or v in names) else None
+
+    _state.ctx = (mesh, {k: fix(v) for k, v in rules.items()})
+    try:
+        with jax.set_mesh(mesh):
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def active():
+    return getattr(_state, "ctx", None)
+
+
+def logical_spec(*axes: Optional[str]) -> Optional[P]:
+    ctx = active()
+    if ctx is None:
+        return None
+    _, rules = ctx
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axes; validated against the
+    array's shape (indivisible / duplicate axes are dropped); no-op
+    without an active mesh."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = logical_spec(*axes)
+    if spec is None:
+        return x
+    spec = valid_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings by leaf path
+# ---------------------------------------------------------------------------
+
+#: (path substring, array rank) -> logical axes, scanned in order.
+#: Stacked layer params have a leading layer axis (rank + 1) — handled by
+#: prepending None in param_spec.
+_PARAM_RULES = [
+    ("embed", ("vocab", None)),
+    ("lm_head", (None, "vocab")),
+    ("router", (None, None)),
+    # MoE expert banks (E, D, F) / (E, F, D): expert-parallel
+    ("w_up", ("experts", None, "ff")),
+    ("w_gate", ("experts", None, "ff")),
+    ("w_down", ("experts", "ff", None)),
+    # attention
+    ("wq", (None, "heads")),
+    ("wk", (None, "kv_heads")),
+    ("wv", (None, "kv_heads")),
+    ("wo_gate", (None, "heads")),
+    ("wo", ("heads", None)),
+    # mlp
+    ("up", (None, "ff")),
+    ("gate", (None, "ff")),
+    ("down", ("ff", None)),
+    # ssm projections
+    ("wB", (None, "heads")),
+    ("wC", (None, "heads")),
+    ("wx", (None, "heads")),
+    ("wz", (None, "heads")),
+    ("wdt", (None, None)),
+    ("wf", (None, None)),
+    ("wi", (None, "heads")),
+    ("wog", (None, "heads")),
+    ("pos_table", (None, None)),
+    # decode caches (stacked over layers by the caller -> rank+1 handling):
+    # KV cache (B, KV, S, hd): batch over data axes, *sequence* over model
+    # (kv-head counts like 1/2/5/8/20 rarely divide TP=16; seq always does;
+    # softmax over the sharded kv axis becomes a cheap psum pair)
+    ("k", ("batch", None, "kv_seq", None)),
+    ("v", ("batch", None, "kv_seq", None)),
+    # SSM matrix state (B, H, DK, DV) and normalizer (B, H, DK)
+    ("S", ("batch", "heads", None, None)),
+    ("n", ("batch", "heads", None)),
+    # sLSTM scalar states (B, H*hd)
+    ("c", ("batch", "heads")),
+    ("m", ("batch", "heads")),
+]
+
+
+def param_logical_axes(path: str, ndim: int):
+    """Logical axes for a parameter leaf (path: '/'-joined key path)."""
+    leaf = path.split("/")[-1]
+    for frag, axes in _PARAM_RULES:
+        if frag == leaf or frag in path.split("/"):
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim - 1:
+                return (None,) + tuple(axes)     # stacked layer dim
+            if len(axes) == ndim - 2:
+                return (None, None) + tuple(axes)
+    return (None,) * ndim
+
+
+def param_spec(path: str, ndim: int) -> P:
+    ctx = active()
+    axes = param_logical_axes(path, ndim)
+    if ctx is None:
+        return P(*(None for _ in range(ndim)))
+    _, rules = ctx
+    return P(*(rules.get(a) for a in axes))
+
+
+def tree_paths(tree, prefix=""):
+    """Flatten a nested dict/NamedTuple pytree into (path, leaf) pairs.
+    None nodes are empty subtrees (jax semantics) and are skipped."""
+    out = []
+    if tree is None:
+        return out
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(tree_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            v = getattr(tree, k)
+            out.extend(tree_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(tree_paths(v, f"{prefix}/{i}" if prefix else str(i)))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def tree_param_specs(tree):
+    """Pytree of PartitionSpecs matching ``tree``'s structure."""
+    leaves_with_paths = tree_paths(tree)
+    specs = {path: param_spec(path, getattr(leaf, "ndim", 0))
+             for path, leaf in leaves_with_paths}
+
+    def rebuild(subtree, prefix=""):
+        if subtree is None:
+            return None
+        if isinstance(subtree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in subtree.items()}
+        if hasattr(subtree, "_fields"):
+            return type(subtree)(*(rebuild(getattr(subtree, k),
+                                           f"{prefix}/{k}" if prefix else str(k))
+                                   for k in subtree._fields))
+        if isinstance(subtree, (list, tuple)):
+            return type(subtree)(rebuild(v, f"{prefix}/{i}" if prefix else str(i))
+                                 for i, v in enumerate(subtree))
+        return specs[prefix]
+
+    return rebuild(tree)
+
+
+def valid_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that don't divide the dim or are already used in an
+    earlier dim (a mesh axis may appear at most once per spec) — e.g.
+    granite's single KV head cannot shard over model=16, and qwen2-moe's
+    60 experts don't divide 16 so the expert-FF dim takes TP instead."""
+    used = set()
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, parts):
+        axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        keep = []
+        size = 1
+        for a in axes:
+            if a in used or a not in mesh.shape:
+                continue
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        for a in keep:
+            used.add(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def tree_shardings(mesh, tree):
+    """NamedShardings for a pytree of arrays/ShapeDtypeStructs, validated
+    against dim divisibility."""
+    specs = tree_param_specs(tree)
+    return jax.tree.map(
+        lambda leaf, s: NamedSharding(mesh, valid_spec(s, leaf.shape, mesh)),
+        tree, specs)
+
+
+def zero_spec(spec: P, shape, mesh, data_axes=("data",)) -> P:
+    """ZeRO-1: add the data axes to the first replicated, divisible dim.
+    If no dim is divisible by the full axis product, fall back to axis
+    subsets (e.g. 1600-wide params on a ("data","model") request shard
+    16-way instead of staying replicated)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts for a in
+            ((p,) if isinstance(p, str) else (p or ()))}
+    axes = tuple(a for a in data_axes if a in mesh.shape and a not in used)
+    if not axes:
+        return valid_spec(P(*parts), shape, mesh)
+    # Prefer non-leading dims: dim 0 of a stacked-layer parameter is the
+    # scan axis — sharding it makes XLA window-buffer whole layer groups.
+    order = list(range(1, len(shape))) + [0] if len(shape) >= 3 \
+        else list(range(len(shape)))
+    candidates = [axes] + [(a,) for a in axes]
+    for axes_try in candidates:
+        dsize = 1
+        for a in axes_try:
+            dsize *= mesh.shape[a]
+        if dsize == 1:
+            continue
+        for i in order:
+            if parts[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+                parts[i] = axes_try if len(axes_try) > 1 else axes_try[0]
+                return valid_spec(P(*parts), shape, mesh)
+    return valid_spec(P(*parts), shape, mesh)
+
+
+def tree_zero_shardings(mesh, tree, data_axes=("data",)):
+    specs = tree_param_specs(tree)
+    return jax.tree.map(
+        lambda leaf, s: NamedSharding(
+            mesh, zero_spec(s, leaf.shape, mesh, data_axes)),
+        tree, specs)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files: the pallas_call + BlockSpec kernel, ops.py
+(jit'd public wrapper, interpret=True default for CPU validation), and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+
+from .matmul import matmul, matmul_pallas, matmul_ref
+from .trsm import trsm, trsm_diag_pallas, trsm_ref
+from .cholesky import cholesky, cholesky_block_pallas, cholesky_ref
+from .flash_attention import (flash_attention, flash_attention_pallas,
+                              flash_attention_ref)
+from .ssm_scan import ssm_scan, ssm_scan_pallas, ssm_scan_ref

@@ -1,0 +1,3 @@
+from .cholesky import cholesky_block_pallas
+from .ops import cholesky
+from .ref import cholesky_ref

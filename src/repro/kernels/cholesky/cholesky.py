@@ -1,0 +1,54 @@
+"""Single-block Cholesky factorization Pallas kernel.
+
+TPU adaptation: dpotrf's scalar column recurrence has no MXU shape, so —
+as with dtrsm — the kernel factors only a VMEM-resident diagonal block
+(rank-1 updates on the VPU, one column per step), and ops.py blocks the
+full factorization so panel solves and trailing (syrk) updates run through
+the trsm/matmul kernels on the MXU.
+
+One grid step per call (the block is the whole problem for the kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _chol_kernel(a_ref, l_ref, *, nb: int):
+    a = a_ref[...].astype(jnp.float32)
+    row = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+
+    def body(k, a):
+        akk = lax.dynamic_slice(a, (k, k), (1, 1))
+        d = jnp.sqrt(akk)
+        col = lax.dynamic_slice(a, (0, k), (nb, 1)) / d
+        col = jnp.where(row >= k, col, jnp.zeros_like(col))  # col[k] = d
+        a = lax.dynamic_update_slice(a, col, (0, k))
+        # trailing rank-1 update; (col*mask)[k] == 0 keeps column k intact
+        colm = jnp.where(row > k, col, jnp.zeros_like(col))
+        a = a - jnp.dot(colm, colm.T, preferred_element_type=jnp.float32)
+        return a
+
+    a = lax.fori_loop(0, nb, body, a)
+    colj = lax.broadcasted_iota(jnp.int32, (nb, nb), 1)
+    rowi = lax.broadcasted_iota(jnp.int32, (nb, nb), 0)
+    l_ref[...] = jnp.where(rowi >= colj, a, jnp.zeros_like(a)).astype(l_ref.dtype)
+
+
+def cholesky_block_pallas(a: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """L with L L^T = A for one SPD block (nb x nb, nb <= ~512)."""
+    nb = a.shape[0]
+    assert a.shape == (nb, nb)
+    return pl.pallas_call(
+        functools.partial(_chol_kernel, nb=nb),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((nb, nb), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((nb, nb), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, nb), a.dtype),
+        interpret=interpret,
+    )(a)

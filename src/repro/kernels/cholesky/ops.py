@@ -1,0 +1,48 @@
+"""Blocked Cholesky (right-looking) composed from all three linalg kernels:
+diagonal factor (cholesky kernel), panel solve (trsm kernel: L_ij L_jj^T =
+A_ij), trailing syrk update (matmul kernel)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..matmul.ops import matmul
+from ..trsm.ops import trsm
+from .cholesky import cholesky_block_pallas
+from .ref import cholesky_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def cholesky(a: jax.Array, *, block: int = 256, interpret: bool = True) -> jax.Array:
+    """L with L L^T = A (A SPD, (n, n))."""
+    n = a.shape[0]
+    if n % block != 0 or n <= block:
+        if n <= block and n >= 8:
+            return cholesky_block_pallas(a, interpret=interpret)
+        return cholesky_ref(a)
+    nb = n // block
+    acc = a
+    l_cols = []
+    for j in range(nb):
+        jj = j * block
+        ajj = jax.lax.slice(acc, (jj, jj), (jj + block, jj + block))
+        ljj = cholesky_block_pallas(ajj, interpret=interpret)
+        if j + 1 < nb:
+            # panel: L_ij = A_ij (L_jj^T)^{-1}  =>  X U = B with U = L_jj^T
+            a_panel = jax.lax.slice(acc, (jj + block, jj), (n, jj + block))
+            l_panel = trsm(ljj.T, a_panel, block=block, interpret=interpret)
+            # trailing syrk: A_trail -= L_panel @ L_panel^T
+            upd = matmul(l_panel, l_panel.T, interpret=interpret,
+                         out_dtype=acc.dtype)
+            trail = jax.lax.slice(acc, (jj + block, jj + block), (n, n)) - upd
+            acc = jax.lax.dynamic_update_slice(acc, trail,
+                                               (jj + block, jj + block))
+            col = jnp.concatenate([ljj, l_panel], axis=0)
+        else:
+            col = ljj
+        col_full = jnp.pad(col, ((jj, 0), (0, 0)))
+        l_cols.append(col_full)
+    return jnp.concatenate(l_cols, axis=1)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the Cholesky kernel."""
+
+import jax.numpy as jnp
+
+
+def cholesky_ref(a):
+    return jnp.linalg.cholesky(a.astype(jnp.float32)).astype(a.dtype)

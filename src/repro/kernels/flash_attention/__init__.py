@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention_pallas
+from .ops import flash_attention
+from .ref import flash_attention_ref

@@ -1,0 +1,111 @@
+"""FlashAttention Pallas kernel (prefill path), GQA-aware.
+
+Grid: (B*H, Sq/bq, Skv/bkv) with the KV dimension innermost; the online-
+softmax statistics (running max m, running sum l) and the f32 output
+accumulator live in VMEM scratch and carry across the sequential KV steps.
+GQA maps query head -> kv head in the K/V index_map (bh // group), so K/V
+blocks are fetched once per group from HBM.
+
+Causal blocks entirely above the diagonal are skipped with pl.when (no MXU
+work issued); the partially-masked diagonal block applies an element mask.
+Stats are kept (bq, 128)-shaped — the minimum VMEM tile — with every lane
+holding the row value (standard TPU flash layout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bkv: int, n_kv: int,
+                  kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (ik * bkv <= (iq + 1) * bq - 1) if causal else (ik * bkv < kv_len)
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
+        cols = ik * bkv + lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        valid = cols < kv_len                             # mask KV padding
+        if causal:
+            rows = iq * bq + lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            valid = valid & (rows >= cols)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 128)
+        m_cur = jnp.max(s, axis=1, keepdims=True)         # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)                # broadcast
+        p = jnp.exp(s - m_new[:, :1])                     # (bq, bkv)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])     # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, scale: float | None = None,
+                           bq: int = 256, bkv: int = 256,
+                           kv_len: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BKV, Skv, D) with BH % BKV == 0.
+    D and the sequence lengths must be multiples of 128 (ops.py pads);
+    ``kv_len`` is the unpadded KV length (padding columns are masked)."""
+    bh, sq, d = q.shape
+    bkv_heads, skv, _ = k.shape
+    assert bh % bkv_heads == 0
+    group = bh // bkv_heads
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    while sq % bq != 0 and bq > 128:
+        bq //= 2
+    while skv % bkv != 0 and bkv > 128:
+        bkv //= 2
+    assert sq % bq == 0 and skv % bkv == 0, (sq, skv, bq, bkv)
+    scale = scale if scale is not None else d ** -0.5
+    n_kv = skv // bkv
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bkv=bkv, n_kv=n_kv,
+                               kv_len=kv_len if kv_len is not None else skv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

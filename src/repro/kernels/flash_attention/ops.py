@@ -1,0 +1,42 @@
+"""jit'd wrapper: (B, H, S, D) API, head-dim padding to 128-multiples,
+sequence padding, GQA folding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KV, S, D).  Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    _, kv, skv, _ = k.shape
+    scale = d ** -0.5  # scale by the *true* head dim before padding
+    if s < 128 or skv < 128 or (causal and s != skv):
+        # tiny shapes, or causal cross-length (decode) -> oracle path
+        return flash_attention_ref(q.reshape(b * h, s, d),
+                                   k.reshape(b * kv, skv, d),
+                                   v.reshape(b * kv, skv, d),
+                                   causal=causal, scale=scale).reshape(b, h, s, d)
+    dp = _round_up(d, 128)
+    sp = _round_up(s, 128)
+    skvp = _round_up(skv, 128)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sp - s), (0, dp - d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, dp - d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, dp - d)))
+    out = flash_attention_pallas(
+        qp.reshape(b * h, sp, dp), kp.reshape(b * kv, skvp, dp),
+        vp.reshape(b * kv, skvp, dp), causal=causal, scale=scale,
+        kv_len=skv, interpret=interpret)
+    return out.reshape(b, h, sp, dp)[:, :, :s, :d]

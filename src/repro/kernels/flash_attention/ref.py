@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    scale = scale if scale is not None else d ** -0.5
+    kf = jnp.repeat(k, group, axis=0).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=0).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .matmul import matmul_pallas
+from .ops import matmul
+from .ref import matmul_ref

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the matmul kernel."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, precision=lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

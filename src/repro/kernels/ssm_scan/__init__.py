@@ -1,0 +1,3 @@
+from .ops import ssm_scan
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan_pallas

@@ -1,0 +1,36 @@
+"""jit'd wrapper: (B, H, S, D) API, sequence padding (log_a padding uses 0
+= no decay, k padding 0 contributes nothing), head folding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan_pallas
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssm_scan(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array, *,
+             interpret: bool = True) -> jax.Array:
+    """q, k: (B, H, S, DK); v: (B, H, S, DV); log_a: (B, H, S)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if s < 128:
+        return ssm_scan_ref(q.reshape(b * h, s, dk), k.reshape(b * h, s, dk),
+                            v.reshape(b * h, s, dv),
+                            log_a.reshape(b * h, s)).reshape(b, h, s, dv)
+    sp = _round_up(s, 128)
+    pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+    qp = jnp.pad(q, pad).reshape(b * h, sp, dk)
+    kp = jnp.pad(k, pad).reshape(b * h, sp, dk)
+    vp = jnp.pad(v, pad).reshape(b * h, sp, dv)
+    lap = jnp.pad(log_a, ((0, 0), (0, 0), (0, sp - s))).reshape(b * h, sp)
+    y = ssm_scan_pallas(qp, kp, vp, lap, interpret=interpret)
+    return y.reshape(b, h, sp, dv)[:, :, :s, :]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: the sequential recurrence, step by step."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(q, k, v, log_a):
+    """q, k: (BH, S, DK); v: (BH, S, DV); log_a: (BH, S)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    a = jnp.exp(log_a.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, at = inp
+        S = at * S + kt[:, None] * vt[None, :]
+        return S, qt @ S
+
+    def per_head(qh, kh, vh, ah):
+        S0 = jnp.zeros((q.shape[-1], v.shape[-1]), jnp.float32)
+        _, y = jax.lax.scan(step, S0, (qh, kh, vh, ah))
+        return y
+
+    y = jax.vmap(per_head)(qf, kf, vf, a)
+    return y.astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Chunked decayed-linear-attention scan kernel (the mLSTM / SSD core).
+
+Computes, per head, the recurrence
+
+    S_t = a_t * S_{t-1} + k_t v_t^T          (state: D x D)
+    y_t = q_t . S_t
+
+in chunk-parallel form (Mamba-2/SSD, mLSTM): the sequence is cut into
+chunks of ``bs``; within a chunk the contribution is a (bs x bs) masked
+matmul (MXU-shaped), across chunks a D x D state carried in VMEM scratch
+over the sequential innermost grid dimension.
+
+Numerical safety: all decay exponentials are of non-positive arguments —
+pairwise terms use exp(A_i - A_j) (j <= i), the state decay uses
+exp(A_total - A_j) — so nothing can overflow even for long chunks.
+
+Normalization trick (used by models/xlstm.py): append a ones-column to V;
+then y[..., D] accumulates the normalizer  q . n_t  with
+n_t = a_t n_{t-1} + k_t, at zero extra kernel cost.
+
+log_a must be <= 0 (forget gates in log space).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, la_ref, y_ref, state_ref, *,
+                bs: int, dk: int, dv: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bs, dk)
+    k = k_ref[0].astype(jnp.float32)              # (bs, dk)
+    v = v_ref[0].astype(jnp.float32)              # (bs, dv)
+    la = la_ref[0].astype(jnp.float32)            # (bs,)
+    A = jnp.cumsum(la)                            # inclusive cumsum, (bs,)
+    total = A[-1]
+
+    # inter-chunk: y_i += (q_i * exp(A_i)) . S_prev
+    q_dec = q * jnp.exp(A)[:, None]
+    y = jnp.dot(q_dec, state_ref[...], preferred_element_type=jnp.float32)
+
+    # intra-chunk: s_ij = (q_i . k_j) * exp(A_i - A_j), j <= i
+    rel = A[:, None] - A[None, :]                 # (bs, bs), <= 0 for j <= i
+    rows = lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+    dec = jnp.where(rows >= cols, jnp.exp(rel), 0.0)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * dec
+    y = y + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S <- exp(total) * S + sum_j exp(total - A_j) k_j v_j^T
+    k_dec = k * jnp.exp(total - A)[:, None]
+    state_ref[...] = state_ref[...] * jnp.exp(total) + jnp.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+
+
+def ssm_scan_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                    log_a: jax.Array, *, bs: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q, k: (BH, S, DK); v: (BH, S, DV); log_a: (BH, S) with values <= 0.
+    Returns y: (BH, S, DV).  S % bs == 0 (ops.py pads)."""
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    bs = min(bs, s)
+    while s % bs != 0 and bs > 128:
+        bs //= 2
+    assert s % bs == 0, (s, bs)
+    kernel = functools.partial(_ssm_kernel, bs=bs, dk=dk, dv=dv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, bs, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, bs, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, bs), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_a)

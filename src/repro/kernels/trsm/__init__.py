@@ -1,0 +1,3 @@
+from .ops import trsm
+from .ref import trsm_ref
+from .trsm import trsm_diag_pallas

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the TRSM kernel: X U = B."""
+
+import jax
+
+
+def trsm_ref(u, b):
+    return jax.scipy.linalg.solve_triangular(
+        u.T.astype(b.dtype), b.T, lower=True).T

@@ -1,0 +1,68 @@
+"""Triangular-solve Pallas kernel:  X U = B  with U upper-triangular.
+
+TPU adaptation (DESIGN.md §3): a triangular solve's column recurrence maps
+poorly onto the MXU, so the kernel only performs the *diagonal-block*
+back-substitution (a ``bu x bu`` block held in VMEM, column loop on the
+VPU), while the ops.py wrapper blocks the full solve so that all O(n^3)
+off-diagonal work runs through the MXU matmul kernel.  This mirrors how
+LibSci's dtrsm spends its flops in dgemm-shaped updates (paper Fig. 1 shows
+dtrsm below dgemm efficiency for the same reason).
+
+Grid: (M/bm,) row blocks of B, each solved independently against U.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _trsm_diag_kernel(u_ref, b_ref, x_ref, acc_ref, *, nb: int):
+    """Back-substitution of one (bm, nb) block of B against (nb, nb) U."""
+    u = u_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(k, _):
+        # s_i = sum_{j<k} x_ij * u_jk  — column k of U is zero below the
+        # diagonal and x[:, k:] is still zero, so a full matvec is exact.
+        ucol = lax.dynamic_slice(u, (0, k), (nb, 1))            # (nb, 1)
+        s = jnp.dot(acc_ref[...], ucol,
+                    preferred_element_type=jnp.float32)         # (bm, 1)
+        bcol = lax.dynamic_slice(b, (0, k), (b.shape[0], 1))
+        ukk = lax.dynamic_slice(u, (k, k), (1, 1))
+        xcol = (bcol - s) / ukk
+        acc_ref[:, pl.ds(k, 1)] = xcol
+        return 0
+
+    lax.fori_loop(0, nb, body, 0)
+    x_ref[...] = acc_ref[...].astype(x_ref.dtype)
+
+
+def trsm_diag_pallas(u: jax.Array, b: jax.Array, *, bm: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Solve X U = B for one diagonal block U (nb x nb, upper-triangular,
+    nb <= ~512 so U fits VMEM); B is (M, nb) with M % bm == 0."""
+    nb = u.shape[0]
+    m = b.shape[0]
+    bm = min(bm, m)
+    while m % bm != 0 and bm > 8:       # largest row block dividing M
+        bm //= 2
+    assert u.shape == (nb, nb) and b.shape[1] == nb and m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_trsm_diag_kernel, nb=nb),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((nb, nb), lambda i: (0, 0)),
+            pl.BlockSpec((bm, nb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, nb), jnp.float32)],
+        interpret=interpret,
+    )(u, b)

@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory_analysis / cost_analysis / collective
+bytes as JSON artifacts for §Dry-run and §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>@<shape>.json; existing
+artifacts are skipped unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ALL_CELLS, SHAPES
+from ..core import hlo as hlo_mod
+from ..core import roofline as rl
+from ..distributed import sharding as shd
+from .mesh import make_production_mesh, mesh_chips
+from .specs import step_and_specs
+
+ARTDIR = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str, out_dir: str,
+             force: bool = False, verbose: bool = True,
+             profile: str = "baseline") -> dict:
+    from .specs import rules_for
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}@{shape}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    with shd.use_mesh(mesh, rules=rules_for(arch, profile)):
+        step_fn, args, model_flops, meta = step_and_specs(arch, shape, mesh)
+        # donate params/opt (train) or caches (decode) — matches the real
+        # runtime and lets outputs alias inputs in memory_analysis
+        donate = (0, 1) if meta["kind"] == "train" else \
+            ((2,) if meta["kind"] == "decode" else ())
+        # None entries (absent cross-attn memory) are valid empty pytrees
+        lowered = jax.jit(step_fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    chips = mesh_chips(mesh)
+    terms = rl.analyze_compiled(compiled, arch=arch, shape=shape,
+                                mesh_name=mesh_name, chips=chips,
+                                model_flops=model_flops)
+    record = terms.to_dict()
+    record.update(meta)
+    record["lower_s"] = round(t_lower, 2)
+    record["compile_s"] = round(t_compile, 2)
+    ma = record.get("memory_analysis", {})
+    record["fits_hbm"] = bool(ma.get("total_bytes", 0) <= 16e9)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        print(f"[{mesh_name}] {arch}@{shape}: compile {t_compile:.1f}s  "
+              f"args {ma.get('argument_bytes', 0)/1e9:.2f} GB/dev  "
+              f"temp {ma.get('temp_bytes', 0)/1e9:.2f} GB/dev  "
+              f"dominant={record['dominant']}  "
+              f"roofline_frac={record['roofline_fraction']:.3f}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="pod",
+                    choices=("pod", "multipod", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--profile", type=str, default="baseline",
+                    choices=("baseline", "dp_sp", "seq_sp"))
+    ap.add_argument("--out", type=str, default=os.path.join(ARTDIR, "dryrun"))
+    args = ap.parse_args()
+
+    cells = ALL_CELLS if args.all else [
+        (a, s) for (a, s) in ALL_CELLS
+        if (args.arch is None or a == args.arch)
+        and (args.shape is None or s == args.shape)]
+    meshes = {"pod": False, "multipod": True}
+    names = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+
+    failures = []
+    for mesh_name in names:
+        mesh = make_production_mesh(multi_pod=meshes[mesh_name])
+        for arch, shape in cells:
+            try:
+                run_cell(arch, shape, mesh, mesh_name,
+                         os.path.join(args.out, mesh_name), force=args.force,
+                         profile=args.profile)
+            except Exception as e:  # noqa: BLE001 — report all cells
+                failures.append((mesh_name, arch, shape, repr(e)))
+                print(f"[{mesh_name}] {arch}@{shape}: FAIL {e}", flush=True)
+                traceback.print_exc()
+    print(f"\ndone: {len(cells) * len(names) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", *f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  Shapes:
+
+    single-pod:  (16, 16)      axes ("data", "model")   = 256 chips
+    multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+On real hardware the same function is used with jax.distributed initialized
+(devices() returns the global TPU slice); in the dry-run the devices are
+512 forced host devices (see dryrun.py lines 1-2).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(pods: int, data: int, model: int):
+    """Elastic-scale builder: any (pods, data, model) factorization whose
+    product matches the available device count."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,222 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation.
+
+``step_and_specs(arch, shape, mesh)`` returns:
+    step_fn    — the function to lower (train_step / prefill_step / serve_step)
+    args       — tuple of ShapeDtypeStructs with NamedShardings attached
+    model_flops— 6*N_active*D for train, 2*N_active*D for inference cells
+    meta       — notes (precision policy, skips, cache bytes, ...)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed import sharding as shd
+from ..models import build_model
+from ..training.optimizer import AdamWConfig, init_adamw
+from ..training.trainer import make_train_step
+from ..serving.engine import make_serve_step
+
+
+def _sds(tree, mesh, *, zero_data_axes=None):
+    """Attach validated NamedShardings to an eval_shape pytree."""
+    if zero_data_axes:
+        sh = shd.tree_zero_shardings(mesh, tree, data_axes=zero_data_axes)
+    else:
+        sh = shd.tree_shardings(mesh, tree)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, sh)
+
+
+def wants_fsdp(cfg: ModelConfig, mesh) -> bool:
+    """FSDP (params sharded over the data axes too — the ZeRO-3 /
+    2.5D-style comm-for-memory trade) when TP alone leaves > 4 GB/chip of
+    parameters."""
+    model_ways = mesh.shape.get("model", 1)
+    per_dev = cfg.param_count() * 2 / model_ways
+    return per_dev > 4e9
+
+
+#: sharding profiles (§Perf iterations) — applied via use_mesh(rules=...)
+PROFILES = {
+    # the default TP(+EP) x DP layout
+    "baseline": lambda cfg: {},
+    # pure data/fully-sharded parallelism + per-sequence locality: no tensor
+    # parallelism at all.  The right layout for models whose head counts
+    # don't divide TP=16 (qwen1.5-4b: 20 heads) — hypothesis: removes the
+    # per-layer seq<->batch resharding all-gathers entirely.
+    "dp_sp": lambda cfg: {"batch": ("pod", "data", "model"), "heads": None,
+                          "kv_heads": None, "ff": None, "vocab": None,
+                          "experts": None, "zero": ("data", "model")},
+    # Megatron-SP: keep activations sequence-sharded over 'model' between
+    # layers (norm/residual in SP), all-gather into TP blocks.
+    "seq_sp": lambda cfg: {"seq": "model"},
+}
+
+
+def rules_for(arch: str, profile: str = "baseline") -> dict:
+    return PROFILES[profile](get(arch))
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *, kind: str):
+    ctx = shd.active()
+    batch_axes = (ctx[1].get("batch") if ctx else None) or ("pod", "data")
+    bspec = shd.valid_spec(P(batch_axes), (shape.global_batch,), mesh)
+    b = shape.global_batch
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+    def tok(s):
+        return jax.ShapeDtypeStruct(
+            (b, s), jnp.int32,
+            sharding=NamedSharding(mesh, shd.valid_spec(
+                P(batch_axes, None), (b, s), mesh)))
+
+    out: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        out["tokens"] = tok(shape.seq_len)
+        if kind == "train":
+            out["labels"] = tok(shape.seq_len)
+    else:  # decode: one new token
+        out["tokens"] = tok(1)
+    if cfg.block_pattern == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.d_model), dt,
+            sharding=NamedSharding(mesh, shd.valid_spec(
+                P(batch_axes, None, None),
+                (b, cfg.encoder.n_frames, cfg.d_model), mesh)))
+    if cfg.block_pattern == "vlm":
+        out["images"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision.n_image_tokens, cfg.d_model), dt,
+            sharding=NamedSharding(mesh, shd.valid_spec(
+                P(batch_axes, None, None),
+                (b, cfg.vision.n_image_tokens, cfg.d_model), mesh)))
+    return out
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """Optimizer/precision policy by scale (recorded per cell in
+    EXPERIMENTS.md §Dry-run):
+      < 80B params:   AdamW, f32 moments
+      80-250B:        AdamW, bf16 moments (fits 16 GB/chip)
+      >= 250B (moe):  Adafactor (factored 2nd moment — the PaLM-style
+                      production choice; Adam states alone would be
+                      ~7.4 GB/chip for arctic-480b on one pod)."""
+    n = cfg.param_count()
+    if n >= 250e9:
+        return AdamWConfig(kind="adafactor")
+    return AdamWConfig(state_dtype="bfloat16" if n >= 80e9 else "float32")
+
+
+def step_and_specs(arch: str, shape_name: str, mesh):
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    meta: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                            "kind": shape.kind}
+
+    params_shape = jax.eval_shape(model.init, key)
+    ctx = shd.active()
+    zero_axes = tuple((ctx[1].get("zero") if ctx else None) or ("data",))
+    no_tp = bool(ctx and ctx[1].get("heads") is None)
+    fsdp = wants_fsdp(cfg, mesh) or (no_tp and cfg.param_count() * 2 > 4e9)
+    meta["fsdp"] = fsdp
+    params_specs = _sds(params_shape, mesh,
+                        zero_data_axes=zero_axes if fsdp else None)
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        meta["opt_state_dtype"] = opt_cfg.state_dtype
+        opt_shape = jax.eval_shape(
+            functools.partial(init_adamw, opt_cfg), params_shape)
+        opt_specs = _sds(opt_shape, mesh, zero_data_axes=zero_axes)
+        batch = _batch_specs(cfg, shape, mesh, kind="train")
+        # microbatching: target <= ~2 GB/chip of rematerialization stash;
+        # big models accumulate in bf16 (the accumulator is param-sized)
+        chips = 1
+        for v in mesh.shape.values():
+            chips *= v
+        stash = (cfg.n_layers * shape.global_batch * shape.seq_len
+                 * cfg.d_model * 2 / chips)
+        micro = 1
+        while stash / micro > 2.2e9 and micro < shape.global_batch:
+            micro *= 2
+        meta["microbatches"] = micro
+        accum = jnp.bfloat16 if opt_cfg.state_dtype == "bfloat16" else None
+        meta["grad_accum_dtype"] = "bfloat16" if accum else "float32"
+        step_fn = make_train_step(model, opt_cfg, microbatches=micro,
+                                  accum_dtype=accum)
+        args = (params_specs, opt_specs, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape, mesh, kind="prefill")
+
+        def prefill_step(params, batch):
+            memory = model.encode_memory(params, batch)
+            from ..models import transformer as tf
+            from ..models import encdec as ed
+            if cfg.block_pattern == "encdec":
+                hidden, _ = ed.encdec_forward_train(params, cfg,
+                                                    batch["frames"],
+                                                    batch["tokens"])
+            else:
+                hidden, _ = tf.decoder_forward_train(params, cfg,
+                                                     batch["tokens"],
+                                                     memory=memory)
+            # last-position logits (the serving prefill output)
+            from ..models.transformer import lm_logits
+            return lm_logits(params, cfg, hidden[:, -1:, :])
+
+        step_fn = prefill_step
+        args = (params_specs, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode
+        batch = _batch_specs(cfg, shape, mesh, kind="decode")
+        cache_len = min(shape.seq_len, cfg.sliding_window) \
+            if cfg.sliding_window else shape.seq_len
+        meta["cache_len"] = cache_len
+        cache_shape = jax.eval_shape(
+            functools.partial(model.init_cache, shape.global_batch,
+                              cache_len))
+        cache_specs = _sds(cache_shape, mesh)
+        memory_specs = None
+        if cfg.block_pattern == "encdec":
+            memory_specs = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype],
+                sharding=NamedSharding(mesh, shd.valid_spec(
+                    P(("pod", "data"), None, None),
+                    (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                    mesh)))
+        elif cfg.block_pattern == "vlm":
+            memory_specs = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vision.n_image_tokens, cfg.d_model),
+                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype],
+                sharding=NamedSharding(mesh, shd.valid_spec(
+                    P(("pod", "data"), None, None),
+                    (shape.global_batch, cfg.vision.n_image_tokens,
+                     cfg.d_model), mesh)))
+        serve = make_serve_step(model)
+
+        def serve_step(params, tokens, caches, memory=None):
+            return serve(params, tokens, caches, memory)
+
+        step_fn = serve_step
+        args = (params_specs, batch["tokens"], cache_specs, memory_specs)
+        model_flops = 2.0 * n_active * shape.global_batch
+    meta["params"] = int(cfg.param_count())
+    meta["active_params"] = int(n_active)
+    return step_fn, args, model_flops, meta

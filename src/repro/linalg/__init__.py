@@ -1,0 +1,29 @@
+"""Executable distributed dense linear algebra (shard_map) — the paper's
+benchmark applications: Cannon, SUMMA, TRSM, Cholesky in 2D / 2.5D,
+with and without communication overlapping."""
+
+from .grid import distribute, make_grid_mesh, square_grid_mesh
+from .cannon import cannon_2d, cannon_2d_ovlp, cannon_25d, cannon_25d_ovlp
+from .summa import summa_2d, summa_2d_ovlp, summa_25d, summa_25d_ovlp
+from .trsm import trsm_2d, trsm_2d_ovlp, trsm_25d, trsm_25d_ovlp
+from .cholesky import (cholesky_2d, cholesky_2d_ovlp, cholesky_25d,
+                       cholesky_25d_ovlp)
+
+ALGORITHMS = {
+    ("cannon", "2d"): cannon_2d,
+    ("cannon", "2d_ovlp"): cannon_2d_ovlp,
+    ("cannon", "2.5d"): cannon_25d,
+    ("cannon", "2.5d_ovlp"): cannon_25d_ovlp,
+    ("summa", "2d"): summa_2d,
+    ("summa", "2d_ovlp"): summa_2d_ovlp,
+    ("summa", "2.5d"): summa_25d,
+    ("summa", "2.5d_ovlp"): summa_25d_ovlp,
+    ("trsm", "2d"): trsm_2d,
+    ("trsm", "2d_ovlp"): trsm_2d_ovlp,
+    ("trsm", "2.5d"): trsm_25d,
+    ("trsm", "2.5d_ovlp"): trsm_25d_ovlp,
+    ("cholesky", "2d"): cholesky_2d,
+    ("cholesky", "2d_ovlp"): cholesky_2d_ovlp,
+    ("cholesky", "2.5d"): cholesky_25d,
+    ("cholesky", "2.5d_ovlp"): cholesky_25d_ovlp,
+}

@@ -1,0 +1,59 @@
+"""Process-grid meshes and block distributions for the linalg algorithms.
+
+2D algorithms run on a ("row", "col") mesh; 2.5D algorithms add a leading
+("lyr",) replication axis — the paper's extra-memory dimension ``c``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_grid_mesh(rows: int, cols: int, layers: int = 1,
+                   devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    n = rows * cols * layers
+    devices = devices if devices is not None else jax.devices()[:n]
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    devices = list(devices)
+    if layers > 1:
+        return jax.make_mesh((layers, rows, cols), ("lyr", "row", "col"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3,
+                             devices=devices)
+    return jax.make_mesh((rows, cols), ("row", "col"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=devices)
+
+
+def square_grid_mesh(p: int, c: int = 1,
+                     devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """p devices as a (c, g, g) grid with g = sqrt(p/c)."""
+    g = int(round(math.sqrt(p / c)))
+    if g * g * c != p:
+        raise ValueError(f"p={p} is not c*g^2 for c={c}")
+    return make_grid_mesh(g, g, layers=c, devices=devices)
+
+
+def block_spec(mesh: jax.sharding.Mesh, replicated_layers: bool = True) -> P:
+    """PartitionSpec of an (n, n) matrix block-distributed on the grid."""
+    if "lyr" in mesh.shape and replicated_layers:
+        return P("row", "col")
+    return P("row", "col")
+
+
+def distribute(x, mesh: jax.sharding.Mesh, spec: Optional[P] = None):
+    spec = spec if spec is not None else block_spec(mesh)
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def grid_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape["row"]
+
+
+def n_layers(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("lyr", 1)

@@ -1,0 +1,5 @@
+"""LM substrate: layers, attention (GQA/cross/decode), MoE, SSM blocks and
+the per-architecture assembly (transformer.py / encdec.py) behind the
+uniform Model facade (model.py)."""
+
+from .model import Model, build_model

@@ -1,0 +1,232 @@
+"""GQA attention: training (causal / bidirectional / sliding-window),
+decode with KV cache, and cross-attention — all sharding-friendly einsum
+formulations that GSPMD partitions over (data=batch, model=heads).
+
+The Pallas flash kernel (repro.kernels.flash_attention) is a drop-in for
+the prefill path on real TPUs (behind shard_map); the einsum path is what
+the multi-pod dry-run lowers, so collectives are visible to GSPMD.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as shd
+from .layers import apply_rope, init_linear, linear
+
+NEG_INF = -1e30
+
+
+def _attn_constrain(x, *, batch_dim=0, kvh_dim=1, seq_dim=3):
+    """Shard (B, KVH, G, Sq, ...) attention internals: batch over the data
+    axes always; the model axis goes to KV-heads when divisible, else to
+    the q-sequence dim (sequence-parallel attention — softmax is over the
+    *last* (kv) dim, so no extra collectives), else stays replicated."""
+    ctx = shd.active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    data = rules.get("batch") or rules.get("batch_nopod")
+    model = rules.get("heads")
+    spec = [None] * x.ndim
+    data_axes = data if isinstance(data, tuple) else (data,) if data else ()
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    if data_axes and x.shape[batch_dim] % dsize == 0:
+        spec[batch_dim] = data
+    if model and model in mesh.shape:
+        msize = mesh.shape[model]
+        if x.shape[kvh_dim] % msize == 0:
+            spec[kvh_dim] = model
+        elif x.ndim > seq_dim and x.shape[seq_dim] % msize == 0:
+            spec[seq_dim] = model
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    from .layers import dtype_of
+    dt = dtype_of(cfg.dtype)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, dt, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, kv * hd, dt, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, kv * hd, dt, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], h * hd, d, dt),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, KV, S_max, hd)
+    v: jax.Array
+    length: jax.Array     # scalar int32: tokens already cached
+
+
+def init_kv_cache(batch: int, kv_heads: int, max_len: int, hd: int, dtype):
+    z = jnp.zeros((batch, kv_heads, max_len, hd), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)   # (B, n, S, hd)
+
+
+def _merge_heads(x):
+    b, n, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * hd)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Skv,hd); GQA via reshape-grouping."""
+    b, h, sq, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qg = _attn_constrain(q.reshape(b, kvh, g, sq, hd))
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = _attn_constrain(s)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, scale: float,
+                  chunk: int = 1024):
+    """Flash-style online-softmax attention over KV chunks in plain jnp —
+    the (Sq, Skv) score matrix is never materialized beyond (Sq, chunk).
+    The per-chunk body is jax.checkpoint'ed so scan's reverse pass
+    recomputes scores instead of stashing them (memory ~ O(S*chunk)).
+
+    This is the GSPMD-visible twin of kernels/flash_attention (used for
+    the dry-run and CPU runs); the Pallas kernel replaces it on hardware.
+    """
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    while skv % chunk != 0:
+        chunk //= 2
+    n = skv // chunk
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, sq, hd)
+    qg = _attn_constrain(qg)
+    rows = jnp.arange(sq)[:, None]                      # q index == kv index
+
+    def body(carry, i):
+        o, m, l = carry
+        kb = jax.lax.dynamic_slice(k, (0, 0, i * chunk, 0),
+                                   (b, kvh, chunk, hd)).astype(jnp.float32)
+        vb = jax.lax.dynamic_slice(v, (0, 0, i * chunk, 0),
+                                   (b, kvh, chunk, hd)).astype(jnp.float32)
+        s = jnp.einsum("bkgqd,bkld->bkgql", qg, kb)
+        cols = i * chunk + jnp.arange(chunk)[None, :]
+        if causal:
+            valid = rows >= cols
+            if window:
+                valid &= cols > rows - window
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+        s = _attn_constrain(s)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        o_new = o * alpha[..., None] + jnp.einsum("bkgql,bkld->bkgqd", p, vb)
+        return (_attn_constrain(o_new), m_new, l_new), None
+
+    o0 = _attn_constrain(jnp.zeros((b, kvh, g, sq, hd), jnp.float32))
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(jax.checkpoint(body), (o0, m0, l0),
+                                jnp.arange(n))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+#: sequences longer than this use the chunked path in attention_train
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+def causal_mask(sq: int, skv: int, window: int = 0, offset: int = 0):
+    """(1, Sq, Skv) bool; offset = start position of q within kv timeline."""
+    rows = offset + jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    m = rows >= cols
+    if window:
+        m = m & (cols > rows - window)
+    return m[None]
+
+
+def attention_train(p, cfg, x, positions, *, causal: bool = True,
+                    window: int = 0):
+    """Full-sequence attention (train / prefill)."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(linear(p["wq"], x), h, hd)
+    k = _split_heads(linear(p["wk"], x), kv, hd)
+    v = _split_heads(linear(p["wv"], x), kv, hd)
+    if cfg.positions == "rope":
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    sq = x.shape[1]
+    if sq > CHUNKED_ATTN_THRESHOLD:
+        o = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                          scale=hd ** -0.5)
+    else:
+        mask = causal_mask(sq, sq, window) if causal else None
+        o = _sdpa(q, k, v, mask, hd ** -0.5)
+    return linear(p["wo"], _merge_heads(o))
+
+
+def attention_decode(p, cfg, x, cache: KVCache, *, window: int = 0):
+    """Single-step decode against a KV cache.
+
+    The cache is a ring buffer of capacity ``smax``: for full attention
+    smax >= total length so the write index ``length % smax`` equals
+    ``length``; for sliding-window attention smax == window, old entries
+    are overwritten, and validity masking keeps exactly the last ``window``
+    positions — attention is permutation-invariant over KV slots because
+    RoPE is applied at *write* time with absolute positions.
+
+    x: (B, 1, D).  Returns (out, new_cache)."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    b, s1, _ = x.shape
+    assert s1 == 1, "decode path is single-token"
+    pos = cache.length + jnp.arange(s1)                   # (s1,)
+    q = _split_heads(linear(p["wq"], x), h, hd)
+    k_new = _split_heads(linear(p["wk"], x), kvh, hd)
+    v_new = _split_heads(linear(p["wv"], x), kvh, hd)
+    if cfg.positions == "rope":
+        posb = jnp.broadcast_to(pos[None], (b, s1))
+        q = apply_rope(q.transpose(0, 2, 1, 3), posb, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k_new = apply_rope(k_new.transpose(0, 2, 1, 3), posb, cfg.rope_theta).transpose(0, 2, 1, 3)
+    smax = cache.k.shape[2]
+    write_idx = cache.length % smax
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, 0, write_idx, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, 0, write_idx, 0))
+    cols = jnp.arange(smax)[None, :]
+    # slots < length+1 hold data; once wrapped, every slot is valid
+    mask = cols < jnp.minimum(cache.length + s1, smax)
+    o = _sdpa(q, k, v, mask[None], hd ** -0.5)
+    out = linear(p["wo"], _merge_heads(o))
+    return out, KVCache(k, v, cache.length + s1)
+
+
+def cross_attention(p, cfg, x, memory):
+    """x: (B, S, D) attends to memory (B, M, D) (encoder states / image
+    patch embeddings).  No positions on q/k (whisper & llama-vision style
+    use their own; stubbed as none for the cross path)."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(linear(p["wq"], x), h, hd)
+    k = _split_heads(linear(p["wk"], memory), kvh, hd)
+    v = _split_heads(linear(p["wv"], memory), kvh, hd)
+    o = _sdpa(q, k, v, None, hd ** -0.5)
+    return linear(p["wo"], _merge_heads(o))

@@ -1,0 +1,103 @@
+"""Shared layer primitives (pure functional: init_* returns param pytrees,
+apply functions take them explicitly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return {"w": w}
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def linear(p, x):
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": jax.nn.silu, "gelu": gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, gated: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, d, d_ff, dtype),
+         "down": init_linear(k2, d_ff, d, dtype)}
+    if gated:
+        p["gate"] = init_linear(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, activation: str = "silu"):
+    act = ACTIVATIONS[activation]
+    h = linear(p["up"], x)
+    if "gate" in p:
+        h = h * act(linear(p["gate"], x))
+    else:
+        h = act(h)
+    return linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,115 @@
+"""Model facade: uniform init / loss / decode API over every architecture.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+(params explicit), ready for jax.jit / jax.grad / the launcher:
+
+    model.init(key)                          -> params
+    model.loss(params, batch)                -> (scalar, metrics)
+    model.encode_memory(params, batch)       -> cross-attn memory or None
+    model.init_cache(batch, max_len)         -> decode caches
+    model.decode_step(params, tok, caches, memory) -> (logits, caches)
+
+Batches are dicts: tokens/labels (LM), frames (whisper), images (vlm).
+The loss computes cross-entropy in seq-chunks (cfg.logits_chunk) so the
+(B, S, V) logits tensor is never fully materialized — essential for the
+long-sequence dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import encdec as ed
+from . import transformer as tf
+
+
+def _chunked_ce(params, cfg, hidden, labels, chunk: int):
+    """Mean CE over tokens, computed chunk-by-chunk along the sequence."""
+    b, s, d = hidden.shape
+    chunk = chunk or s
+    chunk = min(chunk, s)
+    while s % chunk != 0:
+        chunk //= 2
+    n = s // chunk
+
+    def one(carry, idx):
+        total, count = carry
+        h = jax.lax.dynamic_slice(hidden, (0, idx * chunk, 0), (b, chunk, d))
+        y = jax.lax.dynamic_slice(labels, (0, idx * chunk), (b, chunk))
+        logits = tf.lm_logits(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        total = total + jnp.sum((logz - gold) * valid)
+        count = count + jnp.sum(valid)
+        return (total, count), None
+
+    # remat the chunk body: the (B, chunk, V) logits are recomputed in the
+    # backward pass instead of being stashed once per chunk
+    (total, count), _ = jax.lax.scan(
+        jax.checkpoint(one),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return total / jnp.maximum(count, 1.0)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        if self.cfg.block_pattern == "encdec":
+            return ed.init_encdec_params(key, self.cfg)
+        return tf.init_decoder_params(key, self.cfg)
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch) -> tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.block_pattern == "encdec":
+            hidden, aux = ed.encdec_forward_train(
+                params, cfg, batch["frames"], batch["tokens"])
+        elif cfg.block_pattern == "vlm":
+            memory = self.encode_memory(params, batch)
+            hidden, aux = tf.decoder_forward_train(
+                params, cfg, batch["tokens"], memory=memory)
+        else:
+            hidden, aux = tf.decoder_forward_train(params, cfg,
+                                                   batch["tokens"])
+        ce = _chunked_ce(params, cfg, hidden, labels, cfg.logits_chunk)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- memory (cross-attention context) -------------------------------------
+    def encode_memory(self, params, batch) -> Optional[jax.Array]:
+        cfg = self.cfg
+        if cfg.block_pattern == "encdec":
+            return ed.encode(params, cfg, batch["frames"])
+        if cfg.block_pattern == "vlm":
+            # patch-embedding frontend stub: precomputed (B, N_img, D)
+            return constrain(batch["images"], "batch", "frames", "dmodel")
+        return None
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        if self.cfg.block_pattern == "encdec":
+            return ed.init_encdec_cache(self.cfg, batch, max_len)
+        return tf.init_decode_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, tokens, caches, memory=None):
+        if self.cfg.block_pattern == "encdec":
+            return ed.encdec_decode_step(params, self.cfg, tokens, caches,
+                                         memory)
+        return tf.decoder_decode_step(params, self.cfg, tokens, caches,
+                                      memory=memory)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,299 @@
+"""SSM / linear-recurrence blocks: the xLSTM pair (mLSTM, sLSTM) and the
+Mamba-style SSD head used by hymba.
+
+The shared engine is *decayed linear attention*,
+
+    S_t = a_t S_{t-1} + k_t v_t^T ,   y_t = q_t . S_t  (+ normalizer),
+
+computed in chunked form (sub-quadratic: O(S*chunk + S*D^2/chunk)) — the
+same math as the Pallas ssm_scan kernel, expressed in jnp so GSPMD can
+shard it for the dry-run; on hardware the kernel slots in behind shard_map.
+
+mLSTM (xLSTM): q,k,v heads with exponential input gate folded into k·v and
+sigmoid forget gate a_t; normalizer n_t = a_t n_{t-1} + i_t k_t gives
+y = (q.S) / max(|q.n|, 1).  sLSTM: a true nonlinear recurrence (scalar
+memory per head) — not chunkable, runs as lax.scan over time; its state is
+O(d) so decode is cheap.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dtype_of, init_linear, linear, rmsnorm, init_norm
+
+
+# ---------------------------------------------------------------------------
+# chunked decayed linear attention (jnp mirror of kernels/ssm_scan)
+# ---------------------------------------------------------------------------
+
+
+def decayed_linear_attention(q, k, v, log_a, *, chunk: int = 256):
+    """q,k: (B,H,S,DK); v: (B,H,S,DV); log_a: (B,H,S) <= 0.
+    Returns (y, final_state) with y: (B,H,S,DV), state: (B,H,DK,DV)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    while s % c != 0:
+        c //= 2
+    n = s // c
+
+    qc = q.reshape(b, h, n, c, dk)
+    kc = k.reshape(b, h, n, c, dk)
+    vc = v.reshape(b, h, n, c, dv)
+    lac = log_a.reshape(b, h, n, c).astype(jnp.float32)
+    A = jnp.cumsum(lac, axis=-1)                        # inclusive
+    total = A[..., -1]                                  # (B,H,N)
+
+    rows = jnp.arange(c)[:, None]
+    cols = jnp.arange(c)[None, :]
+    tri = rows >= cols
+
+    # intra-chunk
+    rel = A[..., :, None] - A[..., None, :]             # (B,H,N,C,C)
+    dec = jnp.where(tri, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bhncd,bhnld->bhncl", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * dec
+    y_intra = jnp.einsum("bhncl,bhnlv->bhncv", scores, vc.astype(jnp.float32))
+
+    # inter-chunk: scan over chunk states
+    k_dec = kc.astype(jnp.float32) * jnp.exp(total[..., None, None]
+                                             - A[..., None])
+    chunk_state = jnp.einsum("bhncd,bhncv->bhndv", k_dec, vc.astype(jnp.float32))
+
+    def scan_fn(S, inp):
+        cs, tot = inp
+        S_new = S * jnp.exp(tot)[..., None, None] + cs
+        return S_new, S                                  # emit state *before*
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    # move chunk axis to front for scan
+    cs_t = jnp.moveaxis(chunk_state, 2, 0)
+    tot_t = jnp.moveaxis(total, 2, 0)
+    S_final, S_prevs = jax.lax.scan(scan_fn, S0, (cs_t, tot_t))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 2)                # (B,H,N,DK,DV)
+
+    q_dec = qc.astype(jnp.float32) * jnp.exp(A[..., None])
+    y_inter = jnp.einsum("bhncd,bhndv->bhncv", q_dec, S_prevs)
+    y = (y_intra + y_inter).reshape(b, h, s, dv)
+    return y.astype(q.dtype), S_final
+
+
+def decayed_linear_attention_step(q, k, v, log_a, state):
+    """One decode step.  q,k: (B,H,DK); v: (B,H,DV); log_a: (B,H);
+    state: (B,H,DK,DV).  Returns (y, new_state)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + k.astype(jnp.float32)[..., :, None] \
+        * v.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(q.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.hd
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, dt),
+        "wk": init_linear(ks[1], d, h * hd, dt),
+        "wv": init_linear(ks[2], d, h * hd, dt),
+        "wf": init_linear(ks[3], d, h, jnp.float32),   # forget gate
+        "wi": init_linear(ks[4], d, h, jnp.float32),   # input gate
+        "wo_gate": init_linear(ks[5], d, h * hd, dt),  # output gate
+        "wo": init_linear(ks[6], h * hd, d, dt),
+    }
+
+
+class SSMState(NamedTuple):
+    S: jax.Array       # (B, H, DK, DV) matrix memory
+    n: jax.Array       # (B, H, DK) normalizer
+    length: jax.Array
+
+
+def init_ssm_state(batch: int, heads: int, dk: int, dv: int):
+    return SSMState(jnp.zeros((batch, heads, dk, dv), jnp.float32),
+                    jnp.zeros((batch, heads, dk), jnp.float32),
+                    jnp.zeros((), jnp.int32))
+
+
+def _heads(x, h, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+
+def mlstm_train(p, cfg, x, *, chunk: int = 256):
+    """Full-sequence mLSTM (chunked linear attention + normalizer)."""
+    h, hd = cfg.n_heads, cfg.hd
+    b, s, d = x.shape
+    q = _heads(linear(p["wq"], x), h, hd) * hd ** -0.5
+    k = _heads(linear(p["wk"], x), h, hd) * hd ** -0.5
+    v = _heads(linear(p["wv"], x), h, hd)
+    log_f = jax.nn.log_sigmoid(
+        linear(p["wf"], x).astype(jnp.float32)).transpose(0, 2, 1)  # (B,H,S)
+    log_i = jax.nn.log_sigmoid(
+        linear(p["wi"], x).astype(jnp.float32)).transpose(0, 2, 1)
+    k = k * jnp.exp(log_i).astype(k.dtype)[..., None]    # fold input gate
+    # normalizer via ones-column augmentation
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, _ = decayed_linear_attention(q, k, v_aug, log_f, chunk=chunk)
+    y, denom = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(denom), 1.0)
+    o_gate = jax.nn.sigmoid(linear(p["wo_gate"], x))
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd) * o_gate
+    return linear(p["wo"], y)
+
+
+def mlstm_decode(p, cfg, x, state: SSMState):
+    """x: (B, 1, D)."""
+    h, hd = cfg.n_heads, cfg.hd
+    b = x.shape[0]
+    xt = x[:, 0]
+    q = linear(p["wq"], x)[:, 0].reshape(b, h, hd) * hd ** -0.5
+    k = linear(p["wk"], x)[:, 0].reshape(b, h, hd) * hd ** -0.5
+    v = linear(p["wv"], x)[:, 0].reshape(b, h, hd)
+    log_f = jax.nn.log_sigmoid(linear(p["wf"], x)[:, 0].astype(jnp.float32))
+    log_i = jax.nn.log_sigmoid(linear(p["wi"], x)[:, 0].astype(jnp.float32))
+    k = k * jnp.exp(log_i).astype(k.dtype)[..., None]
+    a = jnp.exp(log_f)[..., None, None]
+    S = state.S * a + k.astype(jnp.float32)[..., :, None] \
+        * v.astype(jnp.float32)[..., None, :]
+    n = state.n * a[..., 0] + k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), S)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    o_gate = jax.nn.sigmoid(linear(p["wo_gate"], x)[:, 0])
+    y = (y.reshape(b, h * hd) * o_gate.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["wo"], y)[:, None, :], SSMState(S, n, state.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (true nonlinear recurrence; lax.scan over time)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.hd
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": init_linear(ks[0], d, h * hd, dt),
+        "wi": init_linear(ks[1], d, h * hd, jnp.float32),
+        "wf": init_linear(ks[2], d, h * hd, jnp.float32),
+        "wog": init_linear(ks[3], d, h * hd, jnp.float32),
+        "wo": init_linear(ks[4], h * hd, d, dt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array       # (B, H*hd) cell
+    n: jax.Array       # (B, H*hd) normalizer
+    m: jax.Array       # (B, H*hd) stabilizer (log-space max)
+
+
+def init_slstm_state(batch: int, width: int):
+    z = jnp.zeros((batch, width), jnp.float32)
+    return SLSTMState(z, z, z - 1e30 * 0.0)
+
+
+def _slstm_step(state: SLSTMState, zi, ii, fi, oi):
+    """Stabilized exponential-gating sLSTM cell (per feature)."""
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + state.m, ii)
+    i_st = jnp.exp(ii - m_new)
+    f_st = jnp.exp(log_f + state.m - m_new)
+    c = f_st * state.c + i_st * jnp.tanh(zi)
+    n = f_st * state.n + i_st
+    y = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, m_new), y
+
+
+def slstm_train(p, cfg, x):
+    b, s, d = x.shape
+    width = cfg.n_heads * cfg.hd
+    z = linear(p["wz"], x).astype(jnp.float32)
+    i = linear(p["wi"], x).astype(jnp.float32)
+    f = linear(p["wf"], x).astype(jnp.float32)
+    o = linear(p["wog"], x).astype(jnp.float32)
+
+    def scan_fn(st, inp):
+        zt, it, ft, ot = inp
+        st, y = _slstm_step(st, zt, it, ft, ot)
+        return st, y
+
+    st0 = init_slstm_state(b, width)
+    xs = (z.transpose(1, 0, 2), i.transpose(1, 0, 2),
+          f.transpose(1, 0, 2), o.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(scan_fn, st0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return linear(p["wo"], y)
+
+
+def slstm_decode(p, cfg, x, state: SLSTMState):
+    z = linear(p["wz"], x)[:, 0].astype(jnp.float32)
+    i = linear(p["wi"], x)[:, 0].astype(jnp.float32)
+    f = linear(p["wf"], x)[:, 0].astype(jnp.float32)
+    o = linear(p["wog"], x)[:, 0].astype(jnp.float32)
+    state, y = _slstm_step(state, z, i, f, o)
+    return linear(p["wo"], y.astype(x.dtype))[:, None, :], state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style SSD head for hymba (input-dependent decay, conv stub folded
+# into projections; state_dim = cfg.ssm.state_dim per head)
+# ---------------------------------------------------------------------------
+
+
+def init_ssd(key, cfg):
+    d = cfg.d_model
+    h = cfg.ssm.n_ssm_heads or cfg.n_heads
+    st = cfg.ssm.state_dim
+    hd = cfg.hd
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wB": init_linear(ks[0], d, h * st, dt),        # input->state (k-like)
+        "wC": init_linear(ks[1], d, h * st, dt),        # state->out (q-like)
+        "wx": init_linear(ks[2], d, h * hd, dt),        # value path
+        "wdt": init_linear(ks[3], d, h, jnp.float32),   # decay gate
+        "wo": init_linear(ks[4], h * hd, d, dt),
+    }
+
+
+def ssd_train(p, cfg, x, *, chunk: int = 256):
+    h = cfg.ssm.n_ssm_heads or cfg.n_heads
+    st, hd = cfg.ssm.state_dim, cfg.hd
+    b, s, d = x.shape
+    Bm = _heads(linear(p["wB"], x), h, st)
+    Cm = _heads(linear(p["wC"], x), h, st)
+    v = _heads(linear(p["wx"], x), h, hd)
+    log_a = -jax.nn.softplus(
+        linear(p["wdt"], x).astype(jnp.float32)).transpose(0, 2, 1)
+    y, _ = decayed_linear_attention(Cm, Bm, v, log_a, chunk=chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return linear(p["wo"], y)
+
+
+def ssd_decode(p, cfg, x, state: SSMState):
+    h = cfg.ssm.n_ssm_heads or cfg.n_heads
+    st, hd = cfg.ssm.state_dim, cfg.hd
+    b = x.shape[0]
+    Bm = linear(p["wB"], x)[:, 0].reshape(b, h, st)
+    Cm = linear(p["wC"], x)[:, 0].reshape(b, h, st)
+    v = linear(p["wx"], x)[:, 0].reshape(b, h, hd)
+    log_a = -jax.nn.softplus(linear(p["wdt"], x)[:, 0].astype(jnp.float32))
+    y, S = decayed_linear_attention_step(Cm, Bm, v, log_a, state.S)
+    y = y.reshape(b, h * hd)
+    out = linear(p["wo"], y.astype(x.dtype))[:, None, :]
+    return out, SSMState(S, state.n, state.length + 1)

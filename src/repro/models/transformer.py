@@ -1,0 +1,339 @@
+"""Decoder-only LM assembly: scan-over-layers, all assigned block patterns.
+
+Block patterns
+  dense        — GQA attention + (gated) MLP                       [granite,
+                 qwen1.5-4b/110b, starcoder2]
+  moe          — GQA attention + MoE FFN (+ shared/dense residual) [arctic,
+                 qwen2-moe]
+  mlstm_slstm  — alternating mLSTM / sLSTM pairs, no FFN           [xlstm]
+  hymba        — parallel attention + SSD heads, then MLP          [hymba]
+  vlm          — dense blocks with a cross-attention block every
+                 ``vision.cross_attn_every`` layers                [llama-vision]
+
+Whisper's encoder-decoder lives in encdec.py and reuses these blocks.
+
+Everything is scanned over layers (compile time ~O(1) in depth) with
+optional jax.remat per layer; caches for decode are stacked along the layer
+dimension and threaded through the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .attention import (KVCache, attention_decode, attention_train,
+                        cross_attention, init_attention, init_kv_cache)
+from .layers import dtype_of, init_embedding, init_mlp, init_norm, linear, mlp, rmsnorm
+from .moe import init_moe, moe_block
+from .ssm import (SSMState, init_mlstm, init_slstm, init_ssd, init_ssm_state,
+                  init_slstm_state, mlstm_decode, mlstm_train, slstm_decode,
+                  slstm_train, ssd_decode, ssd_train, SLSTMState)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, kind: str):
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": init_norm(d, dt)}
+    if kind == "dense" or kind == "vlm_self":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["norm2"] = init_norm(d, dt)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dt, cfg.gated_mlp)
+    elif kind == "moe":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["norm2"] = init_norm(d, dt)
+        p["moe"] = init_moe(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg)
+    elif kind == "hymba":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["ssd"] = init_ssd(ks[1], cfg)
+        p["norm2"] = init_norm(d, dt)
+        p["mlp"] = init_mlp(ks[2], d, cfg.d_ff, dt, cfg.gated_mlp)
+    elif kind == "cross":
+        p["cross"] = init_attention(ks[0], cfg, cross=True)
+        p["norm2"] = init_norm(d, dt)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dt, cfg.gated_mlp)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def apply_layer_train(p, cfg, kind: str, x, positions, memory=None):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window
+    if kind in ("dense", "vlm_self", "moe"):
+        h = attention_train(p["attn"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+                            positions, causal=True, window=window)
+        x = x + h
+        x = constrain(x, "batch", "seq", "dmodel")
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, aux = moe_block(p["moe"], cfg, h2)
+        else:
+            y = mlp(p["mlp"], h2, cfg.activation)
+        x = x + y
+    elif kind == "mlstm":
+        x = x + mlstm_train(p["mlstm"], cfg,
+                            rmsnorm(p["norm1"], x, cfg.norm_eps),
+                            chunk=cfg.ssm.chunk if cfg.ssm else 256)
+    elif kind == "slstm":
+        x = x + slstm_train(p["slstm"], cfg,
+                            rmsnorm(p["norm1"], x, cfg.norm_eps))
+    elif kind == "hymba":
+        h2 = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        attn_out = attention_train(p["attn"], cfg, h2, positions,
+                                   causal=True, window=window)
+        ssd_out = ssd_train(p["ssd"], cfg, h2,
+                            chunk=cfg.ssm.chunk if cfg.ssm else 256)
+        x = x + 0.5 * (attn_out + ssd_out)        # hymba head fusion (mean)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                    cfg.activation)
+    elif kind == "cross":
+        x = x + cross_attention(p["cross"], cfg,
+                                rmsnorm(p["norm1"], x, cfg.norm_eps), memory)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                    cfg.activation)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "batch", "seq", "dmodel")
+    return x, aux
+
+
+def apply_layer_decode(p, cfg, kind: str, x, cache, memory=None):
+    """x: (B,1,D).  Returns (x, new_cache)."""
+    window = cfg.sliding_window
+    if kind in ("dense", "vlm_self", "moe"):
+        h, cache_kv = attention_decode(
+            p["attn"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+            cache["kv"], window=window)
+        x = x + h
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe_block(p["moe"], cfg, h2)
+        else:
+            y = mlp(p["mlp"], h2, cfg.activation)
+        x = x + y
+        return x, {**cache, "kv": cache_kv}
+    if kind == "mlstm":
+        h, st = mlstm_decode(p["mlstm"], cfg,
+                             rmsnorm(p["norm1"], x, cfg.norm_eps), cache["ssm"])
+        return x + h, {**cache, "ssm": st}
+    if kind == "slstm":
+        h, st = slstm_decode(p["slstm"], cfg,
+                             rmsnorm(p["norm1"], x, cfg.norm_eps), cache["sl"])
+        return x + h, {**cache, "sl": st}
+    if kind == "hymba":
+        h2 = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        a, cache_kv = attention_decode(p["attn"], cfg, h2, cache["kv"],
+                                       window=window)
+        s, st = ssd_decode(p["ssd"], cfg, h2, cache["ssm"])
+        x = x + 0.5 * (a + s)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                    cfg.activation)
+        return x, {**cache, "kv": cache_kv, "ssm": st}
+    if kind == "cross":
+        x = x + cross_attention(p["cross"], cfg,
+                                rmsnorm(p["norm1"], x, cfg.norm_eps), memory)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                    cfg.activation)
+        return x, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# layer-stack plans: (kind, count) groups scanned independently
+# ---------------------------------------------------------------------------
+
+
+def stack_plan(cfg):
+    """Layer grouping for scan: list of (kind, n_repeats, inner_kinds).
+    inner_kinds is the heterogeneous unit scanned n_repeats times."""
+    if cfg.block_pattern == "dense":
+        return [("unit", cfg.n_layers, ("dense",))]
+    if cfg.block_pattern == "moe":
+        return [("unit", cfg.n_layers, ("moe",))]
+    if cfg.block_pattern == "mlstm_slstm":
+        assert cfg.n_layers % 2 == 0
+        return [("unit", cfg.n_layers // 2, ("mlstm", "slstm"))]
+    if cfg.block_pattern == "hymba":
+        return [("unit", cfg.n_layers, ("hymba",))]
+    if cfg.block_pattern == "vlm":
+        e = cfg.vision.cross_attn_every
+        assert cfg.n_layers % e == 0
+        return [("unit", cfg.n_layers // e,
+                 tuple(["vlm_self"] * (e - 1) + ["cross"]))]
+    raise ValueError(cfg.block_pattern)
+
+
+def init_decoder_params(key, cfg):
+    """Embeddings + stacked layer groups + final norm + head."""
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        from .layers import init_linear
+        params["lm_head"] = init_linear(keys[1], cfg.d_model, cfg.vocab_size,
+                                        dt)
+    if cfg.positions == "learned":
+        params["pos_table"] = (jax.random.normal(
+            keys[2], (cfg.max_position, cfg.d_model), jnp.float32) * 0.01
+        ).astype(dt)
+    plan = stack_plan(cfg)
+    groups = []
+    gkey = keys[3]
+    for (name, n, kinds) in plan:
+        gkey, sub = jax.random.split(gkey)
+        layer_keys = jax.random.split(sub, n)
+
+        def init_unit(k, kinds=kinds):
+            uks = jax.random.split(k, len(kinds))
+            return tuple(init_layer(uk, cfg, kind)
+                         for uk, kind in zip(uks, kinds))
+
+        groups.append(jax.vmap(init_unit)(layer_keys))
+    params["groups"] = groups
+    return params
+
+
+def _unit_train(cfg, kinds, unit_params, x, positions, memory):
+    aux = jnp.zeros((), jnp.float32)
+    for kind, p in zip(kinds, unit_params):
+        x, a = apply_layer_train(p, cfg, kind, x, positions, memory)
+        aux = aux + a
+    return x, aux
+
+
+def decoder_forward_train(params, cfg, tokens, *, memory=None,
+                          embeds=None):
+    """tokens: (B, S) int32 (or embeds (B,S,D)).  Returns (logits, aux)."""
+    if embeds is None:
+        x = params["embed"]["w"][tokens]
+    else:
+        x = embeds
+    x = constrain(x, "batch", "seq", "dmodel")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.positions == "learned":
+        x = x + params["pos_table"][:s][None]
+    aux_total = jnp.zeros((), jnp.float32)
+    for (name, n, kinds), stacked in zip(stack_plan(cfg), params["groups"]):
+        def body(carry, unit_params, kinds=kinds):
+            x, aux = carry
+            fn = _unit_train
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    functools.partial(_unit_train, cfg, kinds),
+                    static_argnums=())
+                x, a = fn(unit_params, x, positions, memory)
+            else:
+                x, a = _unit_train(cfg, kinds, unit_params, x, positions,
+                                   memory)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"])
+    else:
+        logits = linear(params["lm_head"], x)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch: int, max_len: int):
+    """Stacked caches per layer group, matching stack_plan order."""
+    dt = dtype_of(cfg.dtype)
+    kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    caches = []
+    for (name, n, kinds) in stack_plan(cfg):
+        def one(kind):
+            c = {}
+            if kind in ("dense", "vlm_self", "moe", "hymba"):
+                c["kv"] = init_kv_cache(batch, cfg.n_kv_heads, kv_len,
+                                        cfg.hd, dt)
+            if kind in ("hymba",):
+                h = cfg.ssm.n_ssm_heads or cfg.n_heads
+                c["ssm"] = init_ssm_state(batch, h, cfg.ssm.state_dim, cfg.hd)
+            if kind == "mlstm":
+                c["ssm"] = init_ssm_state(batch, cfg.n_heads, cfg.hd, cfg.hd)
+            if kind == "slstm":
+                c["sl"] = init_slstm_state(batch, cfg.n_heads * cfg.hd)
+            return c
+        unit = tuple(one(k) for k in kinds)
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+                               unit)
+        caches.append(stacked)
+    return caches
+
+
+def decoder_decode_step(params, cfg, tokens, caches, *, memory=None):
+    """tokens: (B, 1).  Returns (logits, new_caches)."""
+    x = params["embed"]["w"][tokens]
+    if cfg.positions == "learned":
+        # position = current cache length (uniform across layers)
+        first = jax.tree.leaves(caches[0])
+        pos = caches_length(caches)
+        x = x + jax.lax.dynamic_slice(params["pos_table"],
+                                      (pos, 0), (1, cfg.d_model))[None]
+    new_caches = []
+    for (name, n, kinds), stacked_p, stacked_c in zip(
+            stack_plan(cfg), params["groups"], caches):
+        def body(x, pc, kinds=kinds):
+            unit_p, unit_c = pc
+            new_unit_c = []
+            for kind, p, c in zip(kinds, unit_p, unit_c):
+                x, nc = apply_layer_decode(p, cfg, kind, x, c, memory)
+                new_unit_c.append(nc)
+            return x, tuple(new_unit_c)
+
+        x, new_c = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_caches.append(new_c)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), new_caches
+
+
+def caches_length(caches) -> jax.Array:
+    """Current decode position (scalar) from the first stateful cache."""
+    for leaf_path, leaf in _iter_named(caches):
+        if leaf_path.endswith("length"):
+            return leaf[0] if leaf.ndim else leaf
+    return jnp.zeros((), jnp.int32)
+
+
+def _iter_named(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_named(v, f"{prefix}/{k}")
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            yield from _iter_named(getattr(tree, k), f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_named(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree

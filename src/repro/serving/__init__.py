@@ -1,0 +1,3 @@
+"""Batched decode serving."""
+
+from .engine import Engine, ServeConfig, make_serve_step

@@ -1,0 +1,73 @@
+"""Batched decode engine: prompt ingestion + token-by-token generation over
+the uniform Model facade (KV caches for attention archs, recurrent state
+for SSM/hybrid).  Used by the serving example and the decode-shape
+benchmark; the dry-run lowers ``serve_step`` (one new token against a full
+cache) directly."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0           # 0 = greedy
+    max_cache_len: int = 4096
+
+
+def make_serve_step(model: Model):
+    """The jittable one-token step: (params, tok, caches, memory) ->
+    (next_tok_logits, new_caches)."""
+
+    def serve_step(params, tokens, caches, memory=None):
+        return model.decode_step(params, tokens, caches, memory)
+
+    return serve_step
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._step = jax.jit(make_serve_step(model))
+
+    def _ingest(self, prompts: jax.Array, caches, memory):
+        """Feed prompt tokens one at a time (cache-filling prefill)."""
+        b, s = prompts.shape
+        logits = None
+        for i in range(s):
+            logits, caches = self._step(self.params, prompts[:, i:i + 1],
+                                        caches, memory)
+        return logits, caches
+
+    def generate(self, prompts: jax.Array, *, batch_inputs: Optional[Dict[str, Any]] = None,
+                 seed: int = 0) -> jax.Array:
+        """prompts: (B, S) int32.  Returns (B, S + max_new) tokens."""
+        b, s = prompts.shape
+        memory = None
+        if batch_inputs:
+            memory = self.model.encode_memory(self.params, batch_inputs)
+        caches = self.model.init_cache(b, self.cfg.max_cache_len)
+        logits, caches = self._ingest(prompts, caches, memory)
+        key = jax.random.PRNGKey(seed)
+        out = [prompts]
+        tok = None
+        for t in range(self.cfg.max_new_tokens):
+            if self.cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / self.cfg.temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out.append(tok.astype(jnp.int32))
+            logits, caches = self._step(self.params, tok.astype(jnp.int32),
+                                        caches, memory)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,10 @@
+"""Training substrate: AdamW (+ZeRO-1), int8 cross-pod grad compression,
+deterministic data pipeline, atomic sharded checkpoints, straggler
+monitoring and restartable loops."""
+
+from .checkpoint import latest_step, restore, save
+from .data import DataConfig, DataPipeline
+from .fault import (FaultInjector, RestartableLoop, RestartPolicy,
+                    StragglerConfig, StragglerMonitor)
+from .optimizer import AdamState, AdamWConfig, adamw_update, init_adamw
+from .trainer import TrainConfig, Trainer, make_train_step

@@ -1,0 +1,130 @@
+"""Fault tolerance: straggler detection and a restartable training loop.
+
+Straggler detection reuses the paper's central statistic: the ratio of the
+slowest observation to the typical one.  On Hopper the paper measured
+C_max/C_avg offline per communication pattern; here we estimate it *online*
+from step wall-times — ``ratio = max(window) / median(window)`` — and treat
+a sustained blow-up as a sick node / congested link signal.  Actions are
+pluggable: warn, checkpoint-now, or raise for reschedule (the cluster
+scheduler restarts the job; the loop resumes from the last checkpoint).
+
+``RestartableLoop`` wraps a step function with crash recovery: on an
+injected/real fault it restores the latest checkpoint and replays — the
+test suite kills steps deterministically to exercise the path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 20
+    ratio_threshold: float = 2.5      # max/median over the window
+    sustained: int = 3                # consecutive anomalous windows
+    min_steps: int = 10
+
+
+class StragglerMonitor:
+    """Online C_max/C_avg-style step-time statistic (paper §IV adapted)."""
+
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.times = collections.deque(maxlen=cfg.window)
+        self._anomalous = 0
+        self.events: list[dict] = []
+
+    def record(self, seconds: float) -> Optional[dict]:
+        self.times.append(seconds)
+        if len(self.times) < max(self.cfg.min_steps, 4):
+            return None
+        arr = np.asarray(self.times)
+        ratio = float(arr.max() / max(np.median(arr), 1e-9))
+        if ratio > self.cfg.ratio_threshold:
+            self._anomalous += 1
+        else:
+            self._anomalous = 0
+        if self._anomalous >= self.cfg.sustained:
+            event = {"type": "straggler", "ratio": ratio,
+                     "median_s": float(np.median(arr)),
+                     "max_s": float(arr.max())}
+            self.events.append(event)
+            self._anomalous = 0
+            return event
+        return None
+
+    @property
+    def online_cmax_over_cavg(self) -> float:
+        if not self.times:
+            return 1.0
+        arr = np.asarray(self.times)
+        return float(arr.max() / max(np.median(arr), 1e-9))
+
+
+class FaultInjector:
+    """Deterministic fault injection for tests/examples."""
+
+    def __init__(self, fail_at_steps=(), exc=RuntimeError):
+        self.fail_at = set(fail_at_steps)
+        self.exc = exc
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise self.exc(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+
+
+class RestartableLoop:
+    """run(step_fn, save_fn, restore_fn, n_steps): executes step_fn(step)
+    for steps [start, n); on exception restores and continues from the
+    last checkpointed step.  Returns a report dict."""
+
+    def __init__(self, policy: RestartPolicy = RestartPolicy(),
+                 monitor: Optional[StragglerMonitor] = None,
+                 checkpoint_every: int = 50):
+        self.policy = policy
+        self.monitor = monitor or StragglerMonitor()
+        self.checkpoint_every = checkpoint_every
+
+    def run(self, *, n_steps: int, step_fn: Callable[[int], dict],
+            save_fn: Callable[[int], None],
+            restore_fn: Callable[[], int]) -> dict:
+        restarts = 0
+        step = restore_fn()
+        history = []
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                metrics = step_fn(step)
+                dt = time.perf_counter() - t0
+                event = self.monitor.record(dt)
+                history.append({"step": step, "dt": dt, **(metrics or {})})
+                step += 1
+                if event is not None:
+                    save_fn(step)          # checkpoint-now on anomaly
+                    # (post-increment: the state is *after* step-1)
+                elif step % self.checkpoint_every == 0:
+                    save_fn(step)
+            except Exception as e:  # noqa: BLE001 — restart path
+                restarts += 1
+                if restarts > self.policy.max_restarts:
+                    raise
+                time.sleep(self.policy.backoff_s)
+                step = restore_fn()
+        save_fn(step)
+        return {"steps": step, "restarts": restarts,
+                "straggler_events": self.monitor.events,
+                "history": history}

@@ -1,0 +1,209 @@
+"""AdamW with ZeRO-1 optimizer-state sharding and mixed-precision policy.
+
+ZeRO-1 is the LM-training incarnation of the paper's 2.5D trade — spend
+communication (an extra all-gather of updated params) to cut per-chip
+memory by the data-axis degree.  It is expressed purely through sharding
+constraints: optimizer moments get the param's sharding *plus* the 'data'
+axis on the first divisible replicated dimension, and GSPMD inserts the
+reduce-scatter / all-gather pair around the update.
+
+State dtype is configurable (fp32 default; bf16 for the 480B-MoE cells to
+fit 16 GB/chip — recorded per-cell in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as shd
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    zero_sharding: bool = True
+    # "adamw" | "adafactor" — factored second moment (Shazeer & Stern),
+    # no first moment: state is O(rows+cols) instead of 2x params.  The
+    # production choice for ~0.5T-param models on tight HBM (cf. PaLM).
+    kind: str = "adamw"
+
+
+def lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _zero_constrain(tree, params):
+    """Apply ZeRO-1 sharding: param spec + 'data' on the first replicated,
+    divisible dimension of each state leaf."""
+    ctx = shd.active()
+    if ctx is None:
+        return tree
+    mesh, rules = ctx
+    zero_axes = rules.get("zero") or ("data",)
+    if isinstance(zero_axes, str):
+        zero_axes = (zero_axes,)
+    zero_axes = tuple(a for a in zero_axes if a in mesh.shape)
+    if not zero_axes:
+        return tree
+    specs = shd.tree_param_specs(params)
+
+    def constrain_leaf(x, spec):
+        if x.ndim == 0:
+            return x
+        from jax.sharding import NamedSharding
+        zs = shd.zero_spec(spec, x.shape, mesh, data_axes=zero_axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, zs))
+
+    return jax.tree.map(constrain_leaf, tree, specs)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def init_adamw(cfg: AdamWConfig, params) -> AdamState:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+    if cfg.kind == "adafactor":
+        # factored second moment: row/col accumulators in f32 (tiny)
+        def fstate(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        nu = jax.tree.map(fstate, params,
+                          is_leaf=lambda x: hasattr(x, "shape"))
+        return AdamState(jnp.zeros((), jnp.int32), None, nu)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    mu, nu = zeros, jax.tree.map(jnp.copy, zeros)
+    if cfg.zero_sharding:
+        mu = _zero_constrain(mu, params)
+        nu = _zero_constrain(nu, params)
+    return AdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adafactor_update(cfg: AdamWConfig, grads, state: AdamState, params):
+    """Adafactor (factored 2nd moment, no 1st moment, RMS update clipping).
+    The elementwise math runs in the param dtype (the factored accumulators
+    stay f32 — they are tiny); f32 elementwise temporaries over ~0.5T-param
+    stacks are a measured multi-GB memory line item (§Perf)."""
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8   # Shazeer-Stern decay
+    eps = 1e-30
+
+    def upd(p, g, v):
+        # full-size temporaries in the param dtype; f32 only inside fused
+        # reductions and the (tiny) factored accumulators
+        mdt = p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
+        if "vr" in v:
+            vr = v["vr"] * b2 + (1 - b2) * (jnp.mean(
+                jnp.square(g.astype(jnp.float32)), axis=-1) + eps)
+            vc = v["vc"] * b2 + (1 - b2) * (jnp.mean(
+                jnp.square(g.astype(jnp.float32)), axis=-2) + eps)
+            # u = g * rsqrt(vr_i / mean(vr)) * rsqrt(vc_j)
+            r = jax.lax.rsqrt(jnp.clip(
+                vr / jnp.clip(vr.mean(axis=-1, keepdims=True), eps), eps))
+            c = jax.lax.rsqrt(jnp.clip(vc, eps))
+            u = (g.astype(mdt) * r[..., :, None].astype(mdt)
+                 * c[..., None, :].astype(mdt))
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vfull = v["v"] * b2 + (1 - b2) * jnp.square(g.astype(jnp.float32))
+            u = g.astype(mdt) * jax.lax.rsqrt(jnp.clip(vfull, eps)).astype(mdt)
+            new_v = {"v": vfull}
+        # update clipping at RMS 1.0 (Adafactor's d parameter)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u.astype(jnp.float32))) + eps)
+        u = u / jnp.maximum(1.0, rms).astype(mdt)
+        if cfg.weight_decay and p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(mdt)
+        newp = (p.astype(mdt) - lr.astype(mdt) * u).astype(p.dtype)
+        return newp, new_v
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = jax.tree.flatten(state.nu, is_leaf=is_state_leaf)[0]
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_nu = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    gnorm = global_norm(grads)
+    return new_params, AdamState(step, None, new_nu), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamState, params):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.kind == "adafactor":
+        return adafactor_update(cfg, grads, state, params)
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    # Precision policy: when the moments are kept in bf16 (>=100B models),
+    # the update math runs in bf16 too — f32 math over bf16 stores would
+    # materialize model-sized f32 temporaries (measured: 6 x 2.44 GB/dev on
+    # arctic-480b; see EXPERIMENTS.md §Perf).  Smaller models keep f32.
+    mdt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    scale_t = jnp.asarray(scale, mdt)
+    lr_t = lr.astype(mdt)
+    bc1_t = bc1.astype(mdt)
+    bc2_t = bc2.astype(mdt)
+
+    def upd_math(p, g, mu, nu):
+        g = g.astype(mdt) * scale_t
+        mu_n = mu.astype(mdt) * b1 + (1.0 - b1) * g      # python floats are
+        nu_n = nu.astype(mdt) * b2 + (1.0 - b2) * g * g  # weak-typed -> mdt
+        mhat = mu_n / bc1_t
+        vhat = nu_n / bc2_t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(mdt)
+        newp = (p.astype(mdt) - lr_t * delta).astype(p.dtype)
+        return newp, mu_n.astype(mu.dtype), nu_n.astype(nu.dtype)
+
+    out = jax.tree.map(upd_math, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    if cfg.zero_sharding:
+        new_mu = _zero_constrain(new_mu, params)
+        new_nu = _zero_constrain(new_nu, params)
+    return new_params, AdamState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,22 @@
+"""Test configuration.  NOTE: no XLA_FLAGS here — single-device tests must
+see 1 device (multi-device tests spawn subprocesses with their own flags).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False)
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,32 @@
+"""Multi-device validation of the 16 executable linalg variants — runs the
+driver in a subprocess with 9 forced host devices (the main pytest process
+stays single-device per the dry-run instructions)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.fixture(scope="module")
+def verdicts():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=9"
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "drivers", "linalg_driver.py")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+ALL_VARIANTS = [f"{a}_{v}" for a in ("cannon", "summa", "trsm", "cholesky")
+                for v in ("2d", "2d_ovlp", "2.5d", "2.5d_ovlp")]
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS + ["cannon_2d_kernel_mm"])
+def test_variant_matches_oracle(verdicts, name):
+    assert verdicts[name] < 1e-4, f"{name}: rel err {verdicts[name]}"

@@ -1,0 +1,156 @@
+"""Unit + property tests for the performance-model primitives (paper §IV)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CPU_HOST, HOPPER, TPU_V5E, CalibrationTable,
+                        CommModel, ComputeModel, IdentityCalibration,
+                        ParametricCalibration)
+from repro.core import collectives as coll
+from repro.core.perfmodel import (EfficiencyCurve, HOPPER_EFFICIENCY,
+                                  ROUTINE_FLOPS)
+
+CAL = ParametricCalibration()
+CM = CommModel(HOPPER, CAL)
+CM_IDEAL = CommModel(HOPPER, IdentityCalibration())
+
+
+class TestCommModel:
+    def test_ideal_alpha_beta(self):
+        w = 1 << 20
+        t = CM_IDEAL.t_comm(w, 16)
+        assert t == pytest.approx(HOPPER.latency + HOPPER.inv_bandwidth * w)
+
+    def test_calibration_never_speeds_up(self):
+        for d in (1, 4, 32, 1024):
+            for w in (1, 1 << 10, 1 << 24):
+                assert CM.t_comm(w, d) >= CM_IDEAL.t_comm(w, d)
+                assert CM.t_comm_sync(4096, w, d) >= CM.t_comm(w, d) * 0.999
+
+    @given(w=st.integers(1, 1 << 26), d=st.integers(1, 4096),
+           p=st.integers(2, 1 << 19))
+    @settings(max_examples=200, deadline=None)
+    def test_properties(self, w, d, p):
+        t = CM.t_comm(w, d)
+        ts = CM.t_comm_sync(p, w, d)
+        assert t > 0 and ts > 0
+        assert ts >= t  # C_max >= C_avg by construction
+        # monotone in message size
+        assert CM.t_comm(w + 1024, d) >= t
+
+    @given(d1=st.integers(0, 2000), d2=st.integers(0, 2000))
+    @settings(max_examples=100, deadline=None)
+    def test_cavg_monotone_distance(self, d1, d2):
+        lo, hi = min(d1, d2), max(d1, d2)
+        assert CAL.c_avg(hi) >= CAL.c_avg(lo)
+
+    @given(p1=st.integers(2, 1 << 18), p2=st.integers(2, 1 << 18),
+           d=st.integers(1, 512))
+    @settings(max_examples=100, deadline=None)
+    def test_cmax_monotone_in_p(self, p1, p2, d):
+        lo, hi = min(p1, p2), max(p1, p2)
+        assert CAL.c_max(hi, d) >= CAL.c_max(lo, d) - 1e-12
+
+
+class TestCalibrationTable:
+    def _table(self):
+        avg = {1.0: 1.1, 4.0: 1.5, 16.0: 2.2, 64.0: 3.0}
+        mx = {}
+        for p in (64, 256, 1024):
+            for d in (1.0, 4.0, 16.0, 64.0):
+                mx[(float(p), d)] = avg[d] * (1 + 0.2 * math.log2(p))
+        return CalibrationTable(avg=avg, mx=mx)
+
+    def test_interpolation_endpoints(self):
+        t = self._table()
+        assert t.c_avg(1) == pytest.approx(1.1)
+        assert t.c_avg(64) == pytest.approx(3.0)
+        assert 1.1 < t.c_avg(2) < 1.5
+
+    def test_extrapolation_in_p(self):
+        t = self._table()
+        v_in = t.c_max(1024, 16)
+        v_out = t.c_max(16384, 16)   # beyond measured -> polynomial regression
+        assert v_out >= v_in * 0.9
+        assert v_out >= 1.0
+
+    def test_json_roundtrip(self):
+        t = self._table()
+        t2 = CalibrationTable.from_json(t.to_json())
+        for d in (1, 3, 16, 64):
+            assert t2.c_avg(d) == pytest.approx(t.c_avg(d))
+        for p in (64, 500, 1024, 5000):
+            assert t2.c_max(p, 16) == pytest.approx(t.c_max(p, 16))
+
+    def test_floor_at_one(self):
+        t = CalibrationTable(avg={1.0: 0.5}, mx={(64.0, 1.0): 0.2})
+        assert t.c_avg(1) >= 1.0
+        assert t.c_max(64, 1) >= 1.0
+
+
+class TestComputeModel:
+    def test_flops_scaling(self):
+        comp = ComputeModel(HOPPER, HOPPER_EFFICIENCY)
+        # dgemm at double block size ~ 8x flops; efficiency only improves
+        t1, t2 = comp.t_rout("dgemm", 1024), comp.t_rout("dgemm", 2048)
+        assert 4 < t2 / t1 < 9
+
+    def test_thread_scaling_and_clamp(self):
+        comp = ComputeModel(HOPPER, HOPPER_EFFICIENCY)
+        t6 = comp.t_rout("dgemm", 2048, 6)
+        t5 = comp.t_rout("dgemm", 2048, 5)
+        t0 = comp.t_rout("dgemm", 2048, 0)     # clamps to 1
+        assert t5 == pytest.approx(t6 * 6 / 5)
+        assert t0 == pytest.approx(t6 * 6)
+
+    def test_rect_as_squares(self):
+        comp = ComputeModel(HOPPER, HOPPER_EFFICIENCY)
+        assert comp.t_rect("dgemm", 512, 2048) == pytest.approx(
+            4 * comp.t_rout("dgemm", 512))
+
+    @given(n=st.integers(8, 8192))
+    @settings(max_examples=50, deadline=None)
+    def test_positive(self, n):
+        comp = ComputeModel(HOPPER, HOPPER_EFFICIENCY)
+        for r in ROUTINE_FLOPS:
+            assert comp.t_rout(r, n) > 0
+
+
+class TestCollectives:
+    @given(q=st.sampled_from([2, 4, 8, 16, 64, 256]),
+           w=st.integers(1 << 8, 1 << 24), d=st.integers(1, 256))
+    @settings(max_examples=100, deadline=None)
+    def test_structures(self, q, w, d):
+        p = q * 4
+        redsca = coll.t_redsca_sync(CM, p, q, w, d)
+        gather = coll.t_gather(CM, q, w, d)
+        reduce_ = coll.t_reduce(CM, p, q, w, d)
+        bcast = coll.t_bcast(CM, p, q, w, d)
+        bcast_s = coll.t_bcast_sync(CM, p, q, w, d)
+        assert reduce_ == pytest.approx(redsca + gather)
+        assert bcast_s >= bcast * 0.999   # C_max on the last step
+        for v in (redsca, gather, reduce_, bcast):
+            assert v > 0
+
+    def test_degenerate_group(self):
+        assert coll.t_gather(CM, 1, 1 << 20, 4) == 0.0
+        assert coll.t_redsca_sync(CM, 16, 1, 1 << 20, 4) == 0.0
+        assert coll.t_inirepl(CM, 64, 1 << 20, 1) == 0.0
+
+    def test_ring_allreduce_is_two_phases(self):
+        k, w = 16, 1 << 22
+        ar = coll.t_ring_allreduce(CM_IDEAL, k, w)
+        ag = coll.t_ring_allgather(CM_IDEAL, k, w)
+        assert ar == pytest.approx(2 * ag)
+
+    def test_gather_volume_conservation(self):
+        # binomial gather with no latency moves ~w*(q-1)/q words through the root
+        q, w = 64, 1 << 22
+        machine_nolat = HOPPER.__class__(**{**HOPPER.__dict__, "latency": 0.0})
+        cm = CommModel(machine_nolat, IdentityCalibration())
+        t = coll.t_gather(cm, q, w, 1)
+        expect = HOPPER.inv_bandwidth * w * (q - 1) / q
+        assert t == pytest.approx(expect, rel=1e-6)

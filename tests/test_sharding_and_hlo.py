@@ -1,0 +1,138 @@
+"""Sharding-rule validation + HLO structural parser tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hlo as hlo_mod
+from repro.distributed import sharding as shd
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class TestValidSpec:
+    def test_drops_indivisible(self):
+        mesh = FakeMesh({"data": 16, "model": 16})
+        s = shd.valid_spec(P("model", None), (20, 64), mesh)
+        assert s == P(None, None)
+
+    def test_drops_duplicate_axis(self):
+        mesh = FakeMesh({"data": 16, "model": 16})
+        s = shd.valid_spec(P("model", "model"), (32, 32), mesh)
+        assert s == P("model", None)
+
+    def test_keeps_valid_tuple(self):
+        mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+        s = shd.valid_spec(P(("pod", "data"), "model"), (64, 32), mesh)
+        assert s == P(("pod", "data"), "model")
+
+    def test_partial_tuple(self):
+        mesh = FakeMesh({"pod": 2, "data": 16})
+        # 16 divisible by pod*? 2*16=32 no -> keeps only pod
+        s = shd.valid_spec(P(("pod", "data"),), (16,), mesh)
+        assert s == P("pod") or s == P(("pod",))
+
+
+class TestZeroSpec:
+    def test_prefers_non_leading_dim_for_stacked(self):
+        mesh = FakeMesh({"data": 16, "model": 16})
+        s = shd.zero_spec(P(None, None, "model"), (80, 8192, 3072), mesh)
+        assert s[1] == "data"          # not the layer dim
+        assert s[0] is None
+
+    def test_matrix_takes_first_free(self):
+        mesh = FakeMesh({"data": 16})
+        s = shd.zero_spec(P(None, None), (64, 32), mesh)
+        assert s[0] == "data"
+
+
+class TestParamRules:
+    def test_expert_banks(self):
+        axes = shd.param_logical_axes("groups/0/moe/w_up", 4)
+        assert axes[1] == "experts"
+
+    def test_kv_cache_rule(self):
+        axes = shd.param_logical_axes("0/kv/k", 5)
+        assert axes == (None, "batch", None, "kv_seq", None)
+
+    def test_attention(self):
+        assert shd.param_logical_axes("layers/attn/wq/w", 2) == (None, "heads")
+
+
+_HLO_FIXTURE = """
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,128]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %b = f32[128,128]{1,0} parameter(1)
+  %d = f32[8,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,128]{1,0}) tuple(%zero, %d)
+  %w = (s32[], f32[8,128]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHloParser:
+    def test_shape_bytes(self):
+        assert hlo_mod.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+        assert hlo_mod.shape_bytes("bf16[2,3]") == 12
+        assert hlo_mod.shape_bytes("(f32[4], s32[2])") == 24
+
+    def test_fixture_trip_count_multiplies_collectives(self):
+        cost = hlo_mod.analyze(_HLO_FIXTURE)
+        # all-reduce inside the 12-trip while: 12 x 8*128*4 bytes
+        assert cost.collective_bytes["all-reduce"] == 12 * 8 * 128 * 4
+        assert cost.collective_counts["all-reduce"] == 12
+        assert ("w", 12) in [(n.split(".")[0], t) for n, t in cost.while_loops]
+
+    def test_fixture_dot_flops(self):
+        cost = hlo_mod.analyze(_HLO_FIXTURE)
+        assert cost.flops == pytest.approx(2 * 8 * 128 * 128)
+
+    def test_real_compile_matches_cost_analysis(self):
+        """For a loop-free jit, parsed flops ~ XLA's cost analysis."""
+        def f(a, b):
+            return jnp.tanh(a @ b).sum()
+        a = jnp.ones((256, 256), jnp.float32)
+        compiled = jax.jit(f).lower(a, a).compile()
+        parsed = hlo_mod.analyze(compiled.as_text())
+        xla_flops = compiled.cost_analysis().get("flops", 0)
+        assert parsed.flops == pytest.approx(xla_flops, rel=0.05)
+
+    def test_scan_flops_corrected(self):
+        """XLA counts a scan body once; the parser multiplies by trips."""
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, ws)
+            return out.sum()
+        x = jnp.ones((64, 64), jnp.float32)
+        ws = jnp.ones((9, 64, 64), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        parsed = hlo_mod.analyze(compiled.as_text())
+        one_dot = 2 * 64 ** 3
+        assert parsed.flops == pytest.approx(9 * one_dot, rel=0.05)
+        xla = compiled.cost_analysis().get("flops", 0)
+        assert xla < parsed.flops   # the very undercount we correct
