@@ -114,6 +114,19 @@ def bench_lm_model():
     _save("lm_model", rows)
 
 
+def bench_tuner():
+    t0 = time.perf_counter()
+    res = run_subprocess_bench("benchmarks.bench_tuner", n_devices=8)
+    _save("tuner", res)
+    emit("tuner_dispatch", (time.perf_counter() - t0) * 1e6,
+         f"model_eval={res['model_eval_us']:.0f}us "
+         f"cache_mem={res['cache_hit_mem_us']:.0f}us "
+         f"cache_disk={res['cache_hit_disk_us']:.0f}us "
+         f"overhead={res['dispatch_overhead_us']:.0f}us "
+         f"pred_speedup={res['predicted_speedup_auto_vs_worst']:.2f} "
+         f"auto={res['auto']}")
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -145,6 +158,7 @@ BENCHES = {
     "roofline": bench_roofline,
     "lm_model": bench_lm_model,
     "kernels": bench_kernels,
+    "tuner": bench_tuner,
 }
 
 

@@ -53,6 +53,17 @@ def main():
                                 mesh=mesh3))
     print(f"cholesky 2.5D err {np.abs(L @ L.T - np.asarray(SPD)).max():.2e}")
 
+    # model-guided dispatch: the tuner picks variant + grid + kernels,
+    # executes, and caches the plan under artifacts/plans/
+    from repro import linalg
+    from repro.tuner import default_tuner
+    C = np.asarray(linalg.matmul(A, B))
+    plan = default_tuner().plan("matmul", n)
+    print(f"\ntuner dispatch: {plan.algo}/{plan.variant} p={plan.p} "
+          f"c={plan.c} kernel={plan.local_kernel} "
+          f"err {np.abs(C-ref).max():.2e} "
+          f"(predicted {plan.predicted['total']*1e3:.2f} ms)")
+
     # and the model's advice for real machines
     from repro.core import AlgoContext, CommModel, ComputeModel, TPU_V5E
     from repro.core.calibration import hopper_fitted_ctx, v5e_pod_simulator

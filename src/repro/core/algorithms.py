@@ -68,10 +68,6 @@ class ModelResult:
     c: int = 1
     r: int = 1
 
-    def pct_of_peak(self, useful_flops: float) -> float:
-        machine = None  # filled by caller via pct helper
-        raise NotImplementedError("use algorithms.pct_of_peak")
-
 
 USEFUL_FLOPS = {
     "cannon": lambda n: 2.0 * n ** 3,

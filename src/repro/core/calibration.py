@@ -43,6 +43,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from . import algorithms as alg
+from .. import compat
 from .fitting import multistart_nelder_mead
 from .machine import CPU_HOST, HOPPER, Machine
 from .paper_data import CORE_COUNTS, PAPER_TABLES
@@ -186,16 +187,15 @@ def bench_contention(n_procs: int, distance: int, words: int = 1 << 20,
     devs = jax.devices()[:n_procs]
     if len(devs) < n_procs:
         raise RuntimeError(f"need {n_procs} devices, have {len(devs)}")
-    mesh = jax.make_mesh((n_procs,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=devs)
+    mesh = compat.make_mesh((n_procs,), ("x",), devices=devs)
     dtype = jnp.float64 if word_bytes == 8 else jnp.float32
 
     def shift(x):
         perm = [(i, (i + distance) % n_procs) for i in range(n_procs)]
         return jax.lax.ppermute(x, "x", perm)
 
-    run = jax.jit(jax.shard_map(shift, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    run = jax.jit(compat.shard_map(shift, mesh=mesh, in_specs=P("x"),
+                                   out_specs=P("x")))
 
     x = jnp.ones((n_procs * words,), dtype)
     xs = jax.device_put(x, NamedSharding(mesh, P("x")))

@@ -196,11 +196,20 @@ _ZERO_COST_OPS = {
 }
 
 
+def _operand_shape(comp: Computation, operand: str) -> str:
+    """Shape of an operand reference.  Depending on the XLA version the
+    operand text either embeds the shape ("f32[64,64]{1,0} %name") or is a
+    bare name resolved through the computation's shape table."""
+    if _SHAPE_RE.search(operand):
+        return operand
+    return comp.shapes.get(operand.split("%")[-1].strip(), "")
+
+
 def _dot_flops(instr: Instruction, comp: Computation) -> float:
     out_elems = _shape_elems(instr.shape)
     out_n = math.prod(out_elems) if out_elems else 1
     lhs = instr.operands[0] if instr.operands else None
-    lhs_shape = comp.shapes.get(lhs, "") if lhs else ""
+    lhs_shape = _operand_shape(comp, lhs) if lhs else ""
     lhs_elems = _shape_elems(lhs_shape)
     contract = instr.attr("lhs_contracting_dims")
     k = 1
@@ -240,13 +249,13 @@ def _instr_memory_bytes(instr: Instruction, comp: Computation) -> float:
     out_b = shape_bytes(instr.shape)
     if instr.op == "dynamic-update-slice":
         upd = instr.operands[1] if len(instr.operands) > 1 else None
-        ub = shape_bytes(comp.shapes.get(upd, "")) if upd else 0
+        ub = shape_bytes(_operand_shape(comp, upd)) if upd else 0
         return 2.0 * ub
     if instr.op == "dynamic-slice":
         return 2.0 * out_b
     in_b = 0
     for o in instr.operands:
-        in_b += shape_bytes(comp.shapes.get(o, ""))
+        in_b += shape_bytes(_operand_shape(comp, o))
     return float(out_b + in_b)
 
 
@@ -266,7 +275,7 @@ def _walk(comps: Dict[str, Computation], comp: Computation, mult: float,
         if instr.op in COLLECTIVE_KINDS or (
                 instr.op.endswith("-start") and instr.op[:-6] in COLLECTIVE_KINDS):
             kind = instr.op[:-6] if instr.op.endswith("-start") else instr.op
-            b = sum(shape_bytes(comp.shapes.get(o, "")) for o in instr.operands)
+            b = sum(shape_bytes(_operand_shape(comp, o)) for o in instr.operands)
             if b == 0:  # operands may be parameters of shape unknown: use result
                 b = shape_bytes(instr.shape)
             cost.collective_bytes[kind] = cost.collective_bytes.get(kind, 0.0) + b * mult
@@ -298,7 +307,9 @@ def _walk_fused(comps: Dict[str, Computation], comp: Computation, mult: float,
         if instr.op == "dot":
             cost.flops += _dot_flops(instr, comp) * mult
         elif instr.op in COLLECTIVE_KINDS:
-            b = sum(shape_bytes(comp.shapes.get(o, "")) for o in instr.operands)
+            b = sum(shape_bytes(_operand_shape(comp, o)) for o in instr.operands)
+            if b == 0:
+                b = shape_bytes(instr.shape)
             cost.collective_bytes[instr.op] = cost.collective_bytes.get(instr.op, 0.0) + b * mult
             cost.collective_counts[instr.op] = cost.collective_counts.get(instr.op, 0.0) + mult
         for callee, w in _called_computations(instr):

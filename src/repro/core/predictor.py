@@ -7,6 +7,12 @@ block-cyclic factors ``r``) and pick the fastest — including the memory
 constraint that 2.5D replication must fit ("our models ... can take into
 account runtime constraints (e.g., available memory)").
 
+The model surface itself lives in ``repro.tuner.registry``
+(``PerfModelRegistry``): this module no longer hard-codes the
+ALGOS/VARIANTS tuples but enumerates whatever the registry holds, so
+registering a new algorithm model makes it selectable here (and by the
+end-to-end autotuner in ``repro.tuner``) with no further changes.
+
 ``prediction_table`` reproduces the structure of paper Tables II-V
 (percentage-of-peak for each variant over a grid of core counts and sizes).
 """
@@ -17,21 +23,33 @@ import dataclasses
 import math
 from typing import Dict, Iterable, Optional, Sequence
 
-from .algorithms import ALGOS, VARIANTS, AlgoContext, ModelResult, evaluate, pct_of_peak
+from .algorithms import (USEFUL_FLOPS, AlgoContext, ModelResult, pct_of_peak)
 
 #: matrices resident per algorithm (A,B,C for matmul; X/B + U for trsm; A for chol)
 _MATRICES = {"cannon": 3.0, "summa": 3.0, "trsm": 2.0, "cholesky": 1.0}
 
+#: algorithms whose layouts are block-cyclic (the r factor matters)
+_NEEDS_R = ("trsm", "cholesky")
+
+
+def _registry():
+    """The unified model registry (lazy import: core must stay importable
+    without the tuner package, and tuner imports core)."""
+    from ..tuner.registry import DEFAULT_REGISTRY
+    return DEFAULT_REGISTRY
+
 
 def _fits_memory(ctx: AlgoContext, algo: str, n: int, p: int, c: int) -> bool:
-    words = _MATRICES[algo] * float(n) * n * c / p
+    words = _MATRICES.get(algo, 3.0) * float(n) * n * c / p
     return words * ctx.comm.machine.word_bytes <= ctx.comp.machine.mem_per_unit
 
 
 def legal_c_values(p: int, *, max_c: Optional[int] = None) -> list[int]:
     """Replication factors: powers of two with c <= p^(1/3) (Solomonik's
     bound: beyond that, the reduction cost dominates) and p/c a perfect
-    square (grid constraint)."""
+    square (grid constraint).  Returns ``[]`` when no legal factor exists —
+    callers decide their own fallback (an illegal c silently returned here
+    used to poison downstream grid construction)."""
     out = []
     cap = max_c or int(round(p ** (1.0 / 3.0)))
     c = 2
@@ -40,7 +58,7 @@ def legal_c_values(p: int, *, max_c: Optional[int] = None) -> list[int]:
         if abs(g - round(g)) < 1e-9:
             out.append(c)
         c *= 2
-    return out or [2]
+    return out
 
 
 @dataclasses.dataclass
@@ -50,32 +68,62 @@ class VariantChoice:
 
 
 def best_variant(ctx: AlgoContext, algo: str, n: int, p: int,
-                 variants: Sequence[str] = VARIANTS,
+                 variants: Optional[Sequence[str]] = None,
                  r_values: Sequence[int] = (1, 2, 4),
-                 max_c: Optional[int] = None) -> Dict[str, VariantChoice]:
-    """Evaluate every variant, tuning (c, r); returns {variant: best choice}."""
+                 max_c: Optional[int] = None,
+                 c_values: Optional[Sequence[int]] = None,
+                 registry=None) -> Dict[str, VariantChoice]:
+    """Evaluate every variant, tuning (c, r); returns {variant: best choice}.
+
+    ``c_values`` overrides the legal-c enumeration for 2.5D variants (the
+    end-to-end tuner passes the replication factors its device pool can
+    actually realize); ``registry`` overrides the default model registry.
+    """
+    reg = registry or _registry()
     out: Dict[str, VariantChoice] = {}
-    needs_r = algo in ("trsm", "cholesky")
-    for variant in variants:
+    needs_r = algo in _NEEDS_R
+    for variant in (variants if variants is not None else reg.variants(algo)):
         candidates = []
-        cs = [1] if variant.startswith("2d") else legal_c_values(p, max_c=max_c)
+        if variant.startswith("2d"):
+            cs = [1]
+        elif c_values is not None:
+            cs = list(c_values)
+        else:
+            cs = legal_c_values(p, max_c=max_c)
+            if not cs:
+                # No legal replication factor: fall back to the smallest
+                # power of two (the model tolerates non-square grids).
+                cs = [2]
         rs = r_values if needs_r else (1,)
         for c in cs:
             if variant.startswith("2.5d") and not _fits_memory(ctx, algo, n, p, c):
                 continue
             for r in rs:
-                res = evaluate(ctx, algo, variant, n, p, c=c, r=r)
+                res = reg.evaluate(ctx, algo, variant, n, p, c=c, r=r)
                 candidates.append(res)
-        if not candidates:  # no c fits: fall back to smallest c (paper notes OOM limits)
-            candidates = [evaluate(ctx, algo, variant, n, p, c=2, r=rs[0])]
+        if not candidates:
+            if c_values is not None:
+                # the caller pinned the replication factors (the end-to-end
+                # tuner does): an over-memory config must *lose*, not be
+                # re-scored as if it fit — drop the variant instead
+                continue
+            # auto-enumeration: fall back to the smallest c so the table
+            # still has an entry (the paper notes these cells as OOM-limited)
+            candidates = [reg.evaluate(ctx, algo, variant, n, p, c=cs[0], r=rs[0])]
         best = min(candidates, key=lambda res: res.total)
         out[variant] = VariantChoice(best, pct_of_peak(ctx, best))
     return out
 
 
 def select(ctx: AlgoContext, algo: str, n: int, p: int, **kw) -> VariantChoice:
-    """The tuner entry point: the single fastest variant for the scenario."""
+    """The tuner entry point: the single fastest variant for the scenario.
+
+    Raises ValueError when every requested variant is memory-infeasible
+    (only possible with pinned ``c_values``)."""
     choices = best_variant(ctx, algo, n, p, **kw)
+    if not choices:
+        raise ValueError(f"no feasible variant for {algo} n={n} p={p} "
+                         f"under the given constraints")
     return max(choices.values(), key=lambda ch: ch.pct_peak)
 
 
@@ -89,32 +137,32 @@ def prediction_table(ctx: AlgoContext, algo: str,
     (Hopper runs one process per NUMA domain).
     """
     tpp = threads_per_process or ctx.comp.machine.threads_per_unit
+    flops_of = USEFUL_FLOPS[algo]
     table: Dict[int, Dict[int, Dict[str, float]]] = {}
     for n in sizes:
         table[n] = {}
+        flops = flops_of(n)
         for cores in core_counts:
             p = max(1, cores // tpp)
             choices = best_variant(ctx, algo, n, p, **kw)
             # %-peak is vs *total cores* peak, as the paper reports.
-            row = {}
-            for variant, ch in choices.items():
-                from .algorithms import USEFUL_FLOPS
-                flops = USEFUL_FLOPS[algo](n)
-                peak = cores * ctx.comp.machine.peak_flops_per_thread
-                row[variant] = 100.0 * flops / (ch.result.total * peak)
-            table[n][cores] = row
+            peak = cores * ctx.comp.machine.peak_flops_per_thread
+            table[n][cores] = {
+                variant: 100.0 * flops / (ch.result.total * peak)
+                for variant, ch in choices.items()}
     return table
 
 
-def format_table(table, algo: str) -> str:
+def format_table(table, algo: str, registry=None) -> str:
+    variants = (registry or _registry()).variants(algo)
     lines = [f"# predicted %-of-peak — {algo}"]
     for n, by_cores in table.items():
         lines.append(f"  size n={n}")
-        lines.append("    cores     " + "  ".join(f"{v:>11}" for v in VARIANTS))
+        lines.append("    cores     " + "  ".join(f"{v:>11}" for v in variants))
         for cores, row in by_cores.items():
             best = max(row.values())
             cells = []
-            for v in VARIANTS:
+            for v in variants:
                 mark = "*" if abs(row[v] - best) < 1e-12 else " "
                 cells.append(f"{row[v]:>10.2f}{mark}")
             lines.append(f"    {cores:>8}  " + "  ".join(cells))

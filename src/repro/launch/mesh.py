@@ -15,22 +15,21 @@ from __future__ import annotations
 
 import jax
 
+from .. import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(pods: int, data: int, model: int):
     """Elastic-scale builder: any (pods, data, model) factorization whose
     product matches the available device count."""
     if pods > 1:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

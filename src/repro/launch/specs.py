@@ -39,12 +39,29 @@ def _sds(tree, mesh, *, zero_data_axes=None):
 
 
 def wants_fsdp(cfg: ModelConfig, mesh) -> bool:
-    """FSDP (params sharded over the data axes too — the ZeRO-3 /
-    2.5D-style comm-for-memory trade) when TP alone leaves > 4 GB/chip of
-    parameters."""
+    """FSDP is *required* (params sharded over the data axes too — the
+    ZeRO-3 / 2.5D-style comm-for-memory trade) when TP alone leaves
+    > 4 GB/chip of parameters."""
     model_ways = mesh.shape.get("model", 1)
     per_dev = cfg.param_count() * 2 / model_ways
     return per_dev > 4e9
+
+
+def choose_fsdp(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                required: bool) -> bool:
+    """Layout choice routed through the tuner: FSDP when memory requires
+    it, else — for train shapes — when the LM-step model predicts the
+    per-layer all-gathers pay for themselves (cached in the plan cache
+    like any linalg plan).  Serving shapes only get FSDP when required:
+    the consulted model prices a *training* step and does not apply."""
+    if shape.kind != "train":
+        return required
+    from ..tuner import default_tuner
+    try:
+        return default_tuner().recommend_fsdp(cfg, shape, dict(mesh.shape),
+                                              required=required)
+    except Exception:  # the model consult must never break a dry-run
+        return required
 
 
 #: sharding profiles (§Perf iterations) — applied via use_mesh(rules=...)
@@ -129,7 +146,9 @@ def step_and_specs(arch: str, shape_name: str, mesh):
     ctx = shd.active()
     zero_axes = tuple((ctx[1].get("zero") if ctx else None) or ("data",))
     no_tp = bool(ctx and ctx[1].get("heads") is None)
-    fsdp = wants_fsdp(cfg, mesh) or (no_tp and cfg.param_count() * 2 > 4e9)
+    fsdp_required = wants_fsdp(cfg, mesh) or (no_tp and
+                                              cfg.param_count() * 2 > 4e9)
+    fsdp = choose_fsdp(cfg, shape, mesh, required=fsdp_required)
     meta["fsdp"] = fsdp
     params_specs = _sds(params_shape, mesh,
                         zero_data_axes=zero_axes if fsdp else None)

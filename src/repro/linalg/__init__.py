@@ -1,6 +1,16 @@
 """Executable distributed dense linear algebra (shard_map) — the paper's
 benchmark applications: Cannon, SUMMA, TRSM, Cholesky in 2D / 2.5D,
-with and without communication overlapping."""
+with and without communication overlapping.
+
+Two API levels:
+
+* **explicit** — the per-variant functions below (``cannon_2d`` ...) take
+  pre-distributed operands and a mesh you built;
+* **model-guided** — ``matmul`` / ``trsm`` / ``cholesky`` take global
+  operands, consult ``repro.tuner`` for the best (variant, c, grid,
+  local kernel) on the available devices, and execute it (plans are
+  cached persistently under ``artifacts/plans/``).
+"""
 
 from .grid import distribute, make_grid_mesh, square_grid_mesh
 from .cannon import cannon_2d, cannon_2d_ovlp, cannon_25d, cannon_25d_ovlp
@@ -27,3 +37,33 @@ ALGORITHMS = {
     ("cholesky", "2.5d"): cholesky_25d,
     ("cholesky", "2.5d_ovlp"): cholesky_25d_ovlp,
 }
+
+
+# -- model-guided entry points (lazy imports: repro.tuner imports this
+# package's submodules, so binding at call time avoids the cycle) -----------
+
+def matmul(A, B, **kwargs):
+    """C = A @ B via the tuner-selected Cannon/SUMMA variant and grid.
+
+    Keyword args: ``devices``, ``tuner``, ``local_kernel`` ("pallas"/"jnp");
+    see ``repro.tuner.dispatch.matmul``.
+    """
+    from ..tuner import dispatch
+    return dispatch.matmul(A, B, **kwargs)
+
+
+def trsm(U, B, **kwargs):
+    """Solve X U = B (U upper-triangular) via the tuner-selected variant.
+
+    Note: shadows the ``repro.linalg.trsm`` *module* as a package
+    attribute; the per-variant functions stay importable from the module
+    (``from repro.linalg.trsm import trsm_2d``) and above.
+    """
+    from ..tuner import dispatch
+    return dispatch.trsm(U, B, **kwargs)
+
+
+def cholesky(A, **kwargs):
+    """L with A = L L^T (A SPD) via the tuner-selected variant."""
+    from ..tuner import dispatch
+    return dispatch.cholesky(A, **kwargs)

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from .grid import grid_size, n_layers
 
 MatMul = Callable[[jax.Array, jax.Array], jax.Array]
@@ -111,8 +112,14 @@ def _make(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None):
 
     fn = functools.partial(_cannon_body, g=g, steps=s, layers=c_layers, s=s,
                            local_mm=mm, overlap=overlap)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=(in_spec, in_spec), out_specs=in_spec))
+
+
+def make(mesh, variant: str, *, local_mm: Optional[MatMul] = None):
+    """Reusable compiled executor: (A, B) -> C for the given variant (the
+    2d/2.5d split is carried by the mesh's layer axis)."""
+    return _make(mesh, overlap=variant.endswith("ovlp"), local_mm=local_mm)
 
 
 def cannon_2d(A, B, *, mesh, local_mm: Optional[MatMul] = None):

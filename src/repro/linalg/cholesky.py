@@ -32,13 +32,27 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from .grid import grid_size, n_layers
 
 MatMul = Callable[[jax.Array, jax.Array], jax.Array]
+#: local diagonal factor hook: A_jj -> L_jj (lower Cholesky factor)
+Chol = Callable[[jax.Array], jax.Array]
+#: local panel solve hook: (A, L_jj) -> A L_jj^{-T}
+PanelSolve = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 def _default_mm(a, b):
     return jnp.dot(a, b, precision=lax.Precision.HIGHEST)
+
+
+def _default_chol(a):
+    return jnp.linalg.cholesky(a)
+
+
+def _default_panel_solve(a, ljj):
+    """A L_jj^{-T}: solve X L_jj^T = A (L_jj^T upper-triangular)."""
+    return jax.scipy.linalg.solve_triangular(ljj, a.T, lower=True).T
 
 
 def _bcast_from(x, axis: str, k):
@@ -55,7 +69,8 @@ def _transpose_perm(g: int, layers: int = 1):
     return perm
 
 
-def _chol_body(a, *, g: int, layers: int, local_mm: MatMul, overlap: bool):
+def _chol_body(a, *, g: int, layers: int, local_mm: MatMul, local_chol: Chol,
+               local_solve: PanelSolve, overlap: bool):
     row = lax.axis_index("row")
     col = lax.axis_index("col")
     lyr = lax.axis_index("lyr") if layers > 1 else 0
@@ -72,9 +87,9 @@ def _chol_body(a, *, g: int, layers: int, local_mm: MatMul, overlap: bool):
             a_eff = a_cur - acc
         # 1. diagonal factor
         ajj = _bcast_from(_bcast_from(a_eff, "row", j), "col", j)
-        ljj = jnp.linalg.cholesky(ajj)
+        ljj = local_chol(ajj)
         # 2. panel solve: L_ij = A_ij L_jj^{-T}
-        panel = jax.scipy.linalg.solve_triangular(ljj, a_eff.T, lower=True).T
+        panel = local_solve(a_eff, ljj)
         lj = jnp.where((col == j) & (row > j), panel, jnp.zeros_like(panel))
         lj = lj + jnp.where((col == j) & (row == j), ljj, jnp.zeros_like(ljj))
         # 3. panel along rows; transposed panel along columns
@@ -101,7 +116,7 @@ def _chol_body(a, *, g: int, layers: int, local_mm: MatMul, overlap: bool):
     if layers > 1:
         # the body's layer-striped masks make the carry vary over 'lyr'
         carry0 = jax.tree.map(
-            lambda x: lax.pcast(x, ("lyr",), to="varying"), carry0)
+            lambda x: compat.pcast_varying(x, ("lyr",)), carry0)
     (a, acc, l_acc), _ = lax.scan(step, carry0, jnp.arange(g))
     if layers > 1:
         # All layers computed identical panels; select layer 0's copy via a
@@ -116,29 +131,55 @@ def _chol_body(a, *, g: int, layers: int, local_mm: MatMul, overlap: bool):
     return l_acc
 
 
-def _make(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None):
+def _make(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None,
+          local_chol: Optional[Chol] = None,
+          local_solve: Optional[PanelSolve] = None):
     g = grid_size(mesh)
     layers = n_layers(mesh)
     fn = functools.partial(_chol_body, g=g, layers=layers,
-                           local_mm=local_mm or _default_mm, overlap=overlap)
+                           local_mm=local_mm or _default_mm,
+                           local_chol=local_chol or _default_chol,
+                           local_solve=local_solve or _default_panel_solve,
+                           overlap=overlap)
     spec = P("row", "col")  # replicated over lyr when present
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
-                                 out_specs=spec))
+    return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=(spec,),
+                                    out_specs=spec))
 
 
-def cholesky_2d(A, *, mesh, local_mm: Optional[MatMul] = None):
+def make(mesh, variant: str, *, local_mm: Optional[MatMul] = None,
+         local_chol: Optional[Chol] = None,
+         local_solve: Optional[PanelSolve] = None):
+    """Reusable compiled executor: A -> L for the given variant (the
+    2d/2.5d split is carried by the mesh's layer axis)."""
+    return _make(mesh, overlap=variant.endswith("ovlp"), local_mm=local_mm,
+                 local_chol=local_chol, local_solve=local_solve)
+
+
+def cholesky_2d(A, *, mesh, local_mm: Optional[MatMul] = None,
+                local_chol: Optional[Chol] = None,
+                local_solve: Optional[PanelSolve] = None):
     """L with A = L L^T; A block-distributed on ("row","col")."""
-    return _make(mesh, overlap=False, local_mm=local_mm)(A)
+    return make(mesh, "2d", local_mm=local_mm, local_chol=local_chol,
+                local_solve=local_solve)(A)
 
 
-def cholesky_2d_ovlp(A, *, mesh, local_mm: Optional[MatMul] = None):
-    return _make(mesh, overlap=True, local_mm=local_mm)(A)
+def cholesky_2d_ovlp(A, *, mesh, local_mm: Optional[MatMul] = None,
+                     local_chol: Optional[Chol] = None,
+                     local_solve: Optional[PanelSolve] = None):
+    return make(mesh, "2d_ovlp", local_mm=local_mm, local_chol=local_chol,
+                local_solve=local_solve)(A)
 
 
-def cholesky_25d(A, *, mesh, local_mm: Optional[MatMul] = None):
+def cholesky_25d(A, *, mesh, local_mm: Optional[MatMul] = None,
+                 local_chol: Optional[Chol] = None,
+                 local_solve: Optional[PanelSolve] = None):
     """2.5D on a ("lyr","row","col") mesh; A replicated over layers."""
-    return _make(mesh, overlap=False, local_mm=local_mm)(A)
+    return make(mesh, "2.5d", local_mm=local_mm, local_chol=local_chol,
+                local_solve=local_solve)(A)
 
 
-def cholesky_25d_ovlp(A, *, mesh, local_mm: Optional[MatMul] = None):
-    return _make(mesh, overlap=True, local_mm=local_mm)(A)
+def cholesky_25d_ovlp(A, *, mesh, local_mm: Optional[MatMul] = None,
+                      local_chol: Optional[Chol] = None,
+                      local_solve: Optional[PanelSolve] = None):
+    return make(mesh, "2.5d_ovlp", local_mm=local_mm, local_chol=local_chol,
+                local_solve=local_solve)(A)

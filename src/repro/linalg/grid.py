@@ -13,6 +13,8 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import compat
+
 
 def make_grid_mesh(rows: int, cols: int, layers: int = 1,
                    devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
@@ -22,12 +24,9 @@ def make_grid_mesh(rows: int, cols: int, layers: int = 1,
         raise ValueError(f"need {n} devices, have {len(devices)}")
     devices = list(devices)
     if layers > 1:
-        return jax.make_mesh((layers, rows, cols), ("lyr", "row", "col"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3,
-                             devices=devices)
-    return jax.make_mesh((rows, cols), ("row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=devices)
+        return compat.make_mesh((layers, rows, cols), ("lyr", "row", "col"),
+                                devices=devices)
+    return compat.make_mesh((rows, cols), ("row", "col"), devices=devices)
 
 
 def square_grid_mesh(p: int, c: int = 1,

@@ -35,9 +35,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from .grid import grid_size, n_layers
 
 MatMul = Callable[[jax.Array, jax.Array], jax.Array]
+#: local solve hook: (B, U) -> X with X U = B (U upper-triangular); the
+#: Pallas trsm kernel plugs in here via the tuner dispatch layer.
+SolveXU = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 def _default_mm(a, b):
@@ -58,7 +62,8 @@ def _bcast_from(x, axis: str, k):
     return lax.psum(jnp.where(idx == k, x, jnp.zeros_like(x)), axis)
 
 
-def _trsm_body(u, b, *, g: int, local_mm: MatMul, overlap: bool):
+def _trsm_body(u, b, *, g: int, local_mm: MatMul, local_solve: SolveXU,
+               overlap: bool):
     row = lax.axis_index("row")
     col = lax.axis_index("col")
 
@@ -73,7 +78,7 @@ def _trsm_body(u, b, *, g: int, local_mm: MatMul, overlap: bool):
     def step(carry, j):
         b_cur, x_acc, ujj, upan = carry
         # 2. local solve for the owners of column j
-        xj = _solve_xu(b_cur, ujj)
+        xj = local_solve(b_cur, ujj)
         xj = jnp.where(col == j, xj, jnp.zeros_like(xj))
         # 3. broadcast X_:j along rows
         xj_b = lax.psum(xj, "col")
@@ -99,10 +104,12 @@ def _trsm_body(u, b, *, g: int, local_mm: MatMul, overlap: bool):
     return x
 
 
-def _make_2d(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None):
+def _make_2d(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None,
+             local_solve: Optional[SolveXU] = None):
     g = grid_size(mesh)
     layers = n_layers(mesh)
     fn = functools.partial(_trsm_body, g=g, local_mm=local_mm or _default_mm,
+                           local_solve=local_solve or _solve_xu,
                            overlap=overlap)
     if layers > 1:
         # 2.5D: U replicated over layers; B/X rows scattered over (lyr,row).
@@ -111,24 +118,40 @@ def _make_2d(mesh, *, overlap: bool, local_mm: Optional[MatMul] = None):
     else:
         u_spec = P("row", "col")
         bx_spec = P("row", "col")
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(u_spec, bx_spec),
-                                 out_specs=bx_spec))
+    return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=(u_spec, bx_spec),
+                                    out_specs=bx_spec))
 
 
-def trsm_2d(U, B, *, mesh, local_mm: Optional[MatMul] = None):
+def make(mesh, variant: str, *, local_mm: Optional[MatMul] = None,
+         local_solve: Optional[SolveXU] = None):
+    """Reusable compiled executor: (U, B) -> X for the given variant (the
+    2d/2.5d split is carried by the mesh's layer axis)."""
+    return _make_2d(mesh, overlap=variant.endswith("ovlp"),
+                    local_mm=local_mm, local_solve=local_solve)
+
+
+def trsm_2d(U, B, *, mesh, local_mm: Optional[MatMul] = None,
+            local_solve: Optional[SolveXU] = None):
     """Solve X U = B; U and B block-distributed on ("row","col")."""
-    return _make_2d(mesh, overlap=False, local_mm=local_mm)(U, B)
+    return _make_2d(mesh, overlap=False, local_mm=local_mm,
+                    local_solve=local_solve)(U, B)
 
 
-def trsm_2d_ovlp(U, B, *, mesh, local_mm: Optional[MatMul] = None):
-    return _make_2d(mesh, overlap=True, local_mm=local_mm)(U, B)
+def trsm_2d_ovlp(U, B, *, mesh, local_mm: Optional[MatMul] = None,
+                 local_solve: Optional[SolveXU] = None):
+    return _make_2d(mesh, overlap=True, local_mm=local_mm,
+                    local_solve=local_solve)(U, B)
 
 
-def trsm_25d(U, B, *, mesh, local_mm: Optional[MatMul] = None):
+def trsm_25d(U, B, *, mesh, local_mm: Optional[MatMul] = None,
+             local_solve: Optional[SolveXU] = None):
     """2.5D: mesh ("lyr","row","col"); U replicated per layer, B rows
     scattered across layers."""
-    return _make_2d(mesh, overlap=False, local_mm=local_mm)(U, B)
+    return _make_2d(mesh, overlap=False, local_mm=local_mm,
+                    local_solve=local_solve)(U, B)
 
 
-def trsm_25d_ovlp(U, B, *, mesh, local_mm: Optional[MatMul] = None):
-    return _make_2d(mesh, overlap=True, local_mm=local_mm)(U, B)
+def trsm_25d_ovlp(U, B, *, mesh, local_mm: Optional[MatMul] = None,
+                  local_solve: Optional[SolveXU] = None):
+    return _make_2d(mesh, overlap=True, local_mm=local_mm,
+                    local_solve=local_solve)(U, B)

@@ -185,7 +185,7 @@ def attention_train(p, cfg, x, positions, *, causal: bool = True,
 
 
 def attention_decode(p, cfg, x, cache: KVCache, *, window: int = 0):
-    """Single-step decode against a KV cache.
+    """Decode step of ``s1 >= 1`` new tokens against a KV cache.
 
     The cache is a ring buffer of capacity ``smax``: for full attention
     smax >= total length so the write index ``length % smax`` equals
@@ -194,10 +194,15 @@ def attention_decode(p, cfg, x, cache: KVCache, *, window: int = 0):
     positions — attention is permutation-invariant over KV slots because
     RoPE is applied at *write* time with absolute positions.
 
-    x: (B, 1, D).  Returns (out, new_cache)."""
+    ``s1 > 1`` is the chunked-prefill path: the chunk is written
+    contiguously and masked causally within itself.  Callers must keep a
+    chunk from wrapping the ring buffer (``length % smax + s1 <= smax``) —
+    the serving engine falls back to single-token steps near the window
+    edge.
+
+    x: (B, s1, D).  Returns (out, new_cache)."""
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     b, s1, _ = x.shape
-    assert s1 == 1, "decode path is single-token"
     pos = cache.length + jnp.arange(s1)                   # (s1,)
     q = _split_heads(linear(p["wq"], x), h, hd)
     k_new = _split_heads(linear(p["wk"], x), kvh, hd)
@@ -212,9 +217,13 @@ def attention_decode(p, cfg, x, cache: KVCache, *, window: int = 0):
         cache.k, k_new.astype(cache.k.dtype), (0, 0, write_idx, 0))
     v = jax.lax.dynamic_update_slice(
         cache.v, v_new.astype(cache.v.dtype), (0, 0, write_idx, 0))
-    cols = jnp.arange(smax)[None, :]
-    # slots < length+1 hold data; once wrapped, every slot is valid
-    mask = cols < jnp.minimum(cache.length + s1, smax)
+    cols = jnp.arange(smax)[None, :]                      # (1, smax)
+    # slots < length+s1 hold data; once wrapped, every slot is valid
+    valid = cols < jnp.minimum(cache.length + s1, smax)
+    # within the just-written chunk, query i must not see slots j > i
+    off = cols - write_idx                                # slot offset in chunk
+    future = (off > jnp.arange(s1)[:, None]) & (off < s1)
+    mask = valid & ~future                                # (s1, smax)
     o = _sdpa(q, k, v, mask[None], hd ** -0.5)
     out = linear(p["wo"], _merge_heads(o))
     return out, KVCache(k, v, cache.length + s1)

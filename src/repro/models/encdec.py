@@ -120,12 +120,14 @@ def init_encdec_cache(cfg, batch: int, max_len: int):
 
 
 def encdec_decode_step(params, cfg, tokens, cache, memory):
-    """tokens: (B,1); memory: encoder output.  Returns (logits, cache)."""
+    """tokens: (B, s1) — one new token or a chunked-prefill chunk;
+    memory: encoder output.  Returns (logits, cache)."""
     x = params["embed"]["w"][tokens]
+    s1 = tokens.shape[1]
     length = jax.tree.leaves(cache)[-1]
     pos = length[0] if length.ndim else length
     x = x + jax.lax.dynamic_slice(params["pos_table"], (pos, 0),
-                                  (1, cfg.d_model))[None]
+                                  (s1, cfg.d_model))[None]
 
     def body(x, pc):
         p, c = pc

@@ -110,6 +110,19 @@ class Model:
         return tf.decoder_decode_step(params, self.cfg, tokens, caches,
                                       memory=memory)
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when decode_step accepts multi-token chunks: every layer is
+        attention-shaped (the recurrent SSM/LSTM decode paths are strictly
+        one-token) and the KV ring buffer cannot wrap inside a chunk (no
+        sliding window)."""
+        if self.cfg.sliding_window:
+            return False
+        if self.cfg.block_pattern == "encdec":
+            return True
+        kinds = {k for _, _, ks in tf.stack_plan(self.cfg) for k in ks}
+        return kinds <= {"dense", "vlm_self", "moe", "cross"}
+
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

@@ -292,14 +292,15 @@ def init_decode_cache(cfg, batch: int, max_len: int):
 
 
 def decoder_decode_step(params, cfg, tokens, caches, *, memory=None):
-    """tokens: (B, 1).  Returns (logits, new_caches)."""
+    """tokens: (B, s1) — one new token, or a chunked-prefill chunk.
+    Returns (logits, new_caches)."""
     x = params["embed"]["w"][tokens]
+    s1 = tokens.shape[1]
     if cfg.positions == "learned":
-        # position = current cache length (uniform across layers)
-        first = jax.tree.leaves(caches[0])
+        # positions = current cache length .. length+s1 (uniform across layers)
         pos = caches_length(caches)
         x = x + jax.lax.dynamic_slice(params["pos_table"],
-                                      (pos, 0), (1, cfg.d_model))[None]
+                                      (pos, 0), (s1, cfg.d_model))[None]
     new_caches = []
     for (name, n, kinds), stacked_p, stacked_c in zip(
             stack_plan(cfg), params["groups"], caches):

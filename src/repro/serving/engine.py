@@ -20,11 +20,13 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0           # 0 = greedy
     max_cache_len: int = 4096
+    prefill_chunk: Optional[int] = None  # None: ask the tuner; 1: per-token
 
 
 def make_serve_step(model: Model):
-    """The jittable one-token step: (params, tok, caches, memory) ->
-    (next_tok_logits, new_caches)."""
+    """The jittable decode step: (params, tokens, caches, memory) ->
+    (logits, new_caches).  tokens is (B, 1) for generation or (B, chunk)
+    during chunked prefill."""
 
     def serve_step(params, tokens, caches, memory=None):
         return model.decode_step(params, tokens, caches, memory)
@@ -39,12 +41,36 @@ class Engine:
         self.cfg = cfg
         self._step = jax.jit(make_serve_step(model))
 
+    def _prefill_chunk(self, seq_len: int) -> int:
+        # architecture gate first: recurrent decode paths and sliding-window
+        # ring buffers are strictly one-token, whatever the config asks for
+        if not self.model.supports_chunked_prefill:
+            return 1
+        if self.cfg.prefill_chunk is not None:
+            return max(1, self.cfg.prefill_chunk)
+        from ..tuner import default_tuner
+        return default_tuner().prefill_chunk(seq_len)
+
     def _ingest(self, prompts: jax.Array, caches, memory):
-        """Feed prompt tokens one at a time (cache-filling prefill)."""
+        """Cache-filling prefill: chunked when the architecture allows it
+        (two compiled shapes total — the chunk and the 1-token remainder),
+        token-by-token otherwise.
+
+        A chunk must never touch the KV ring-buffer boundary
+        (attention_decode's precondition): chunked steps stop at
+        ``max_cache_len`` and the tail falls back to single-token steps,
+        whose ring-wrap semantics are well defined."""
         b, s = prompts.shape
+        chunk = self._prefill_chunk(s)
+        limit = self.cfg.max_cache_len
         logits = None
-        for i in range(s):
-            logits, caches = self._step(self.params, prompts[:, i:i + 1],
+        i = 0
+        while chunk > 1 and s - i >= chunk and i + chunk <= limit:
+            logits, caches = self._step(self.params, prompts[:, i:i + chunk],
+                                        caches, memory)
+            i += chunk
+        for j in range(i, s):
+            logits, caches = self._step(self.params, prompts[:, j:j + 1],
                                         caches, memory)
         return logits, caches
 

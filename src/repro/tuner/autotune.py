@@ -1,0 +1,262 @@
+"""The model-guided autotuner: plans end-to-end execution from the models.
+
+``Tuner.plan(op, n, devices=...)`` answers "how should this operation run
+on this device pool?" by
+
+1. enumerating the process-grid configurations the pool can actually
+   realize (2D ``g x g`` grids and 2.5D ``c x g x g`` grids — the
+   executable 2.5D matmuls need ``c | g``, and replication is capped at
+   ``c <= g`` so every layer owns work);
+2. evaluating every candidate (algo, variant, c) through the registry's
+   analytic models via ``core.predictor`` — the paper's §VI selection,
+   restricted to realizable configurations;
+3. freezing the argmin into an :class:`ExecutionPlan` and persisting it in
+   the plan cache, so the next call with the same (machine fingerprint,
+   op, n, p, dtype) never touches the models again.
+
+The same Tuner also serves the LM layers: ``recommend_fsdp`` consults the
+LM-step model for the parameter-sharding layout choice, and
+``prefill_chunk`` sizes the serving engine's chunked prefill.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core import predictor
+from ..core.algorithms import AlgoContext
+from .plan import (ExecutionPlan, PlanCache, machine_fingerprint, plan_key)
+from .registry import DEFAULT_REGISTRY, PerfModelRegistry, machine_for_platform
+
+#: public operation -> candidate algorithm models (matmul races Cannon
+#: against SUMMA; the factorizations map one-to-one)
+OP_ALGOS: Dict[str, Tuple[str, ...]] = {
+    "matmul": ("cannon", "summa"),
+    "cannon": ("cannon",),
+    "summa": ("summa",),
+    "trsm": ("trsm",),
+    "cholesky": ("cholesky",),
+}
+
+
+def feasible_grids(device_count: int, algo: str) -> List[Tuple[int, int, int]]:
+    """Realizable (p, c, g) grid configurations for a device pool.
+
+    2D: the largest square ``g*g <= device_count`` (one entry).
+    2.5D: every power-of-two ``c`` with ``c * g*g <= device_count``,
+    ``c <= g`` (each layer must own columns / steps), and — for the
+    shift/broadcast matmuls — ``c | g`` (each layer executes a contiguous
+    chunk of ``g/c`` steps).
+    """
+    out: List[Tuple[int, int, int]] = []
+    g2 = int(math.isqrt(device_count))
+    if g2 >= 1:
+        out.append((g2 * g2, 1, g2))
+    c = 2
+    while c * c * c <= device_count:  # c <= g implies c^3 <= c*g*g <= D
+        g = int(math.isqrt(device_count // c))
+        while g >= c:
+            if algo in ("cannon", "summa") and g % c != 0:
+                g -= 1
+                continue
+            out.append((c * g * g, c, g))
+            break
+        c *= 2
+    return out
+
+
+class Tuner:
+    """Registry + plan cache + selection policy, behind one object."""
+
+    def __init__(self, registry: Optional[PerfModelRegistry] = None,
+                 cache: Optional[PlanCache] = None,
+                 plan_dir: Optional[str] = None):
+        self.registry = registry or DEFAULT_REGISTRY
+        self.cache = cache or PlanCache(plan_dir)
+        self.stats = {"model_evals": 0, "cache_hits": 0}
+        self._lm_cal = None
+        self._lock = threading.Lock()
+
+    # -- linalg planning -----------------------------------------------------
+    def plan(self, op: str, n: int, *,
+             devices: Optional[Sequence] = None,
+             device_count: Optional[int] = None,
+             platform: Optional[str] = None,
+             device_kind: Optional[str] = None,
+             dtype: str = "float32",
+             machine: Optional[str] = None,
+             local_kernel: Optional[str] = None,
+             use_cache: bool = True) -> ExecutionPlan:
+        """Resolve (or recall) the best execution plan for ``op`` at size
+        ``n`` on the given device pool.
+
+        Pass real ``devices`` for dispatch, or ``device_count``/``platform``
+        alone to ask hypothetical questions ("what would 4096 Hopper
+        processes run?") without touching jax device state.
+        """
+        if devices is not None:
+            devices = list(devices)
+            device_count = len(devices)
+            platform = platform or devices[0].platform
+            device_kind = device_kind or getattr(devices[0], "device_kind",
+                                                 platform)
+        if device_count is None:
+            import jax
+            devices = list(jax.devices())
+            device_count = len(devices)
+            platform = platform or devices[0].platform
+            device_kind = device_kind or getattr(devices[0], "device_kind",
+                                                 platform)
+        platform = platform or "cpu"
+        device_kind = device_kind or platform
+        machine = machine or machine_for_platform(platform)
+        if local_kernel not in (None, "pallas", "jnp"):
+            raise ValueError(f"local_kernel must be 'pallas' or 'jnp', "
+                             f"got {local_kernel!r}")
+        local_kernel = local_kernel or ("pallas" if platform == "tpu" else "jnp")
+
+        fp = machine_fingerprint(machine, platform, device_kind, device_count)
+        key = plan_key(fp, op, n, device_count, dtype)
+        if use_cache:
+            hit = self.cache.get(key)
+            if hit is not None:
+                try:
+                    plan = ExecutionPlan.from_dict(hit)
+                except (ValueError, TypeError):
+                    self.cache.invalidate(key)
+                else:
+                    with self._lock:
+                        self.stats["cache_hits"] += 1
+                    if plan.local_kernel != local_kernel:
+                        # kernel choice is an execution detail, not a model
+                        # decision — honor the caller without re-planning
+                        import dataclasses
+                        plan = dataclasses.replace(plan,
+                                                   local_kernel=local_kernel)
+                    return plan
+
+        plan = self._build_plan(op, n, device_count, machine, dtype,
+                                local_kernel, fp)
+        with self._lock:
+            self.stats["model_evals"] += 1
+        if use_cache:
+            self.cache.put(key, plan.to_dict())
+        return plan
+
+    def _build_plan(self, op: str, n: int, device_count: int, machine: str,
+                    dtype: str, local_kernel: str, fp: str) -> ExecutionPlan:
+        try:
+            algos = OP_ALGOS[op]
+        except KeyError:
+            raise ValueError(f"unknown op {op!r}; known: {sorted(OP_ALGOS)}") \
+                from None
+        ctx = self.registry.context(machine)
+        best: Optional[Tuple[predictor.VariantChoice, str, int, int, int]] = None
+        for algo in algos:
+            all_variants = self.registry.variants(algo)
+            for p, c, g in feasible_grids(device_count, algo):
+                kind = "2d" if c == 1 else "2.5d"
+                variants = [v for v in all_variants if v.startswith(kind)]
+                if not variants:
+                    continue
+                try:
+                    choice = predictor.select(ctx, algo, n, p,
+                                              variants=variants,
+                                              c_values=[c], r_values=(1,),
+                                              registry=self.registry)
+                except ValueError:
+                    continue  # replication at this c exceeds memory
+                if best is None or choice.result.total < best[0].result.total:
+                    best = (choice, algo, p, c, g)
+        if best is None:
+            raise ValueError(f"no feasible grid for {device_count} devices")
+        choice, algo, p, c, g = best
+        res = choice.result
+        return ExecutionPlan(
+            algo=algo, variant=res.variant, n=n, p=p, c=c, r=res.r, g=g,
+            local_kernel=local_kernel, dtype=dtype, machine=machine,
+            fingerprint=fp,
+            predicted={"total": res.total, "comm": res.comm, "comp": res.comp,
+                       "pct_peak": choice.pct_peak})
+
+    # -- LM-layer consultation ----------------------------------------------
+    def _lm_calibration_table(self):
+        with self._lock:
+            cal = self._lm_cal
+        if cal is None:
+            # build outside the lock: the simulator run is slow and the lock
+            # also serializes every plan() stats update
+            from ..core.calibration import v5e_pod_simulator
+            cal = v5e_pod_simulator().build_table(
+                ps=[16, 64, 256], distances=[1, 2, 4, 8])
+            with self._lock:
+                if self._lm_cal is None:
+                    self._lm_cal = cal
+                cal = self._lm_cal
+        return cal
+
+    def recommend_fsdp(self, cfg, shape, mesh_shape: Dict[str, int], *,
+                       required: bool = False) -> bool:
+        """Parameter-sharding layout choice for a train step: FSDP when the
+        memory constraint requires it, else when the LM-step model predicts
+        the per-layer all-gathers pay for themselves.  Cached per
+        (model, shape, mesh) like any other plan."""
+        if required:
+            return True
+        chips = 1
+        for v in mesh_shape.values():
+            chips *= int(v)
+        name = getattr(cfg, "name", type(cfg).__name__)
+        # the parameter count disambiguates same-named configs (reduced()
+        # smoke-test shrinks keep the production name)
+        params = int(getattr(cfg, "param_count", lambda: 0)())
+        fp = machine_fingerprint("tpu-v5e", "plan", "lm", chips)
+        mesh_tag = "x".join(f"{k}{v}" for k, v in sorted(mesh_shape.items()))
+        key = plan_key(
+            fp, f"fsdp-{name}-np{params}-b{shape.global_batch}-{mesh_tag}",
+            shape.seq_len, chips, "bf16")
+        hit = self.cache.get(key)
+        if hit is not None and "fsdp" in hit:
+            with self._lock:
+                self.stats["cache_hits"] += 1
+            return bool(hit["fsdp"])
+        from ..core.lm_model import predict_train_step
+        cal = self._lm_calibration_table()
+        plain = predict_train_step(cfg, shape, mesh_shape, calibration=cal,
+                                   fsdp=False)
+        fsdp = predict_train_step(cfg, shape, mesh_shape, calibration=cal,
+                                  fsdp=True)
+        with self._lock:
+            self.stats["model_evals"] += 1
+        wants = fsdp.total_overlapped < plain.total_overlapped
+        self.cache.put(key, {"fsdp": bool(wants),
+                             "predicted_plain_s": plain.total_overlapped,
+                             "predicted_fsdp_s": fsdp.total_overlapped})
+        return wants
+
+    def prefill_chunk(self, seq_len: int, *, max_chunk: int = 128) -> int:
+        """Chunk size for the serving engine's prefill: the largest power of
+        two that amortizes per-call dispatch overhead without exploding
+        compile-shape count (two shapes total: the chunk and the 1-token
+        remainder step).  Below 8 tokens chunking cannot win."""
+        if seq_len < 8:
+            return 1
+        chunk = 1
+        while chunk * 2 <= min(seq_len, max_chunk):
+            chunk *= 2
+        return chunk
+
+
+_DEFAULT: Optional[Tuner] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_tuner() -> Tuner:
+    """Process-wide Tuner over the default registry and plan directory."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = Tuner()
+        return _DEFAULT

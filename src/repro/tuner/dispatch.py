@@ -1,0 +1,243 @@
+"""Model-guided dispatch: the executable back half of the tuner.
+
+``matmul`` / ``trsm`` / ``cholesky`` take *global* (unsharded) operands,
+ask the :class:`~repro.tuner.autotune.Tuner` for an
+:class:`~repro.tuner.plan.ExecutionPlan`, build the planned 2D / 2.5D
+process-grid mesh, block-distribute the operands (padding to the grid where
+needed — identity-extended for triangular/SPD structure), and run the
+chosen ``shard_map`` variant with the planned local kernels:
+
+* ``local_kernel="pallas"`` wires the Pallas kernels
+  (``kernels.matmul/trsm/cholesky``) in as the local matmul / triangular
+  solve / diagonal factor (interpret-mode off TPU);
+* ``local_kernel="jnp"`` (the CPU default) uses the ``jnp.dot`` /
+  ``jax.scipy`` locals.
+
+Meshes and compiled executors are memoized per (grid, devices, variant,
+kernel), so a cache-hit call pays only plan lookup + padding + dispatch.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.cholesky.ops import cholesky as _kchol
+from ..kernels.matmul.ops import matmul as _kmm
+from ..kernels.trsm.ops import trsm as _ktrsm
+# NB: import the factories, not the modules — the linalg package shadows
+# the trsm/cholesky module attributes with the dispatch wrappers.
+from ..linalg.cannon import make as _make_cannon
+from ..linalg.cholesky import make as _make_cholesky
+from ..linalg.grid import distribute, make_grid_mesh
+from ..linalg.summa import make as _make_summa
+from ..linalg.trsm import make as _make_trsm
+from .autotune import Tuner, default_tuner
+from .plan import ExecutionPlan
+
+_LOCK = threading.Lock()
+_MESHES: Dict[tuple, jax.sharding.Mesh] = {}
+_EXECUTORS: Dict[tuple, object] = {}
+
+
+# -- local kernel hooks (module-level so executor memoization is stable) ----
+
+def _pallas_mm_interp(a, b):
+    return _kmm(a, b, interpret=True, out_dtype=a.dtype)
+
+
+def _pallas_mm_hw(a, b):
+    return _kmm(a, b, interpret=False, out_dtype=a.dtype)
+
+
+def _pallas_solve_interp(b, u):
+    return _ktrsm(u, b, interpret=True)
+
+
+def _pallas_solve_hw(b, u):
+    return _ktrsm(u, b, interpret=False)
+
+
+def _pallas_chol_interp(a):
+    return _kchol(a, interpret=True)
+
+
+def _pallas_chol_hw(a):
+    return _kchol(a, interpret=False)
+
+
+def _pallas_panel_solve_interp(a, ljj):
+    return _ktrsm(ljj.T, a, interpret=True)
+
+
+def _pallas_panel_solve_hw(a, ljj):
+    return _ktrsm(ljj.T, a, interpret=False)
+
+
+def _local_hooks(algo: str, local_kernel: str, interpret: bool) -> dict:
+    if local_kernel != "pallas":
+        return {}
+    mm = _pallas_mm_interp if interpret else _pallas_mm_hw
+    if algo in ("cannon", "summa"):
+        return {"local_mm": mm}
+    if algo == "trsm":
+        return {"local_mm": mm,
+                "local_solve": _pallas_solve_interp if interpret
+                else _pallas_solve_hw}
+    if algo == "cholesky":
+        return {"local_mm": mm,
+                "local_chol": _pallas_chol_interp if interpret
+                else _pallas_chol_hw,
+                "local_solve": _pallas_panel_solve_interp if interpret
+                else _pallas_panel_solve_hw}
+    raise ValueError(algo)
+
+
+_MAKERS = {"cannon": _make_cannon, "summa": _make_summa, "trsm": _make_trsm,
+           "cholesky": _make_cholesky}
+
+
+def _mesh_for(g: int, c: int, devices: Tuple) -> jax.sharding.Mesh:
+    key = (g, c, tuple(d.id for d in devices))
+    with _LOCK:
+        mesh = _MESHES.get(key)
+    if mesh is None:
+        mesh = make_grid_mesh(g, g, layers=c, devices=list(devices))
+        with _LOCK:
+            _MESHES[key] = mesh
+    return mesh
+
+
+def _executor(plan: ExecutionPlan, mesh, devices: Tuple, interpret: bool):
+    key = (plan.algo, plan.variant, plan.g, plan.c,
+           tuple(d.id for d in devices), plan.local_kernel, interpret)
+    with _LOCK:
+        fn = _EXECUTORS.get(key)
+    if fn is None:
+        hooks = _local_hooks(plan.algo, plan.local_kernel, interpret)
+        fn = _MAKERS[plan.algo](mesh, plan.variant, **hooks)
+        with _LOCK:
+            if len(_EXECUTORS) > 64:
+                _EXECUTORS.clear()
+            _EXECUTORS[key] = fn
+    return fn
+
+
+# -- padding ----------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_zero(x, rows: int, cols: int):
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def _pad_eye(x, size: int):
+    """blockdiag(x, I): structure-preserving pad for triangular/SPD args."""
+    n = x.shape[0]
+    if size == n:
+        return x
+    out = _pad_zero(x, size, size)
+    idx = jnp.arange(n, size)
+    return out.at[idx, idx].set(jnp.ones((), x.dtype))
+
+
+def _check_square(name: str, x) -> int:
+    if x.ndim != 2 or x.shape[0] != x.shape[1]:
+        raise ValueError(f"{name} must be square 2-D, got {x.shape} "
+                         "(the paper's algorithms are square-grid)")
+    return int(x.shape[0])
+
+
+def _dtype_key(x) -> str:
+    """Plan-cache dtype key without staging the operand to device (x64
+    inputs canonicalize the same way jnp.asarray would convert them)."""
+    return str(jax.dtypes.canonicalize_dtype(np.result_type(x)))
+
+
+# -- execution --------------------------------------------------------------
+
+def _resolve(devices: Optional[Sequence], plan_p: int) -> Tuple:
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) < plan_p:
+        raise ValueError(f"plan needs {plan_p} devices, have {len(devices)}")
+    return tuple(devices[:plan_p])
+
+
+def execute(plan: ExecutionPlan, *operands,
+            devices: Optional[Sequence] = None):
+    """Run an already-resolved plan on its operands (benchmarks use this to
+    force specific — including deliberately bad — variants)."""
+    devs = _resolve(devices, plan.p)
+    interpret = devs[0].platform != "tpu"
+    mesh = _mesh_for(plan.g, plan.c, devs)
+    fn = _executor(plan, mesh, devs, interpret)
+    n = plan.n
+    g, c = plan.g, plan.c
+    if plan.algo in ("cannon", "summa"):
+        a, b = (jnp.asarray(x) for x in operands)
+        m = _round_up(n, g)
+        ad = distribute(_pad_zero(a, m, m), mesh, P("row", "col"))
+        bd = distribute(_pad_zero(b, m, m), mesh, P("row", "col"))
+        return fn(ad, bd)[:n, :n]
+    if plan.algo == "trsm":
+        u, b = (jnp.asarray(x) for x in operands)
+        m = _round_up(n, g)
+        mb = _round_up(n, c * g)
+        bx_spec = P(("lyr", "row"), "col") if c > 1 else P("row", "col")
+        ud = distribute(_pad_eye(u, m), mesh, P("row", "col"))
+        bd = distribute(_pad_zero(b, mb, m), mesh, bx_spec)
+        return fn(ud, bd)[:n, :n]
+    if plan.algo == "cholesky":
+        (a,) = (jnp.asarray(x) for x in operands)
+        m = _round_up(n, g)
+        ad = distribute(_pad_eye(a, m), mesh, P("row", "col"))
+        return fn(ad)[:n, :n]
+    raise ValueError(f"unknown algo {plan.algo!r}")
+
+
+def matmul(A, B, *, devices: Optional[Sequence] = None,
+           tuner: Optional[Tuner] = None,
+           local_kernel: Optional[str] = None):
+    """C = A @ B, model-guided: the tuner races the Cannon and SUMMA models
+    over every realizable 2D/2.5D grid and executes the winner."""
+    n = _check_square("A", A)
+    if tuple(B.shape) != tuple(A.shape):
+        raise ValueError(f"A {A.shape} and B {B.shape} must match")
+    t = tuner or default_tuner()
+    devs = list(devices) if devices is not None else jax.devices()
+    plan = t.plan("matmul", n, devices=devs, dtype=_dtype_key(A),
+                  local_kernel=local_kernel)
+    return execute(plan, A, B, devices=devs)
+
+
+def trsm(U, B, *, devices: Optional[Sequence] = None,
+         tuner: Optional[Tuner] = None,
+         local_kernel: Optional[str] = None):
+    """Solve X U = B (U upper-triangular), model-guided."""
+    n = _check_square("U", U)
+    if tuple(B.shape) != tuple(U.shape):
+        raise ValueError(f"U {U.shape} and B {B.shape} must match")
+    t = tuner or default_tuner()
+    devs = list(devices) if devices is not None else jax.devices()
+    plan = t.plan("trsm", n, devices=devs, dtype=_dtype_key(U),
+                  local_kernel=local_kernel)
+    return execute(plan, U, B, devices=devs)
+
+
+def cholesky(A, *, devices: Optional[Sequence] = None,
+             tuner: Optional[Tuner] = None,
+             local_kernel: Optional[str] = None):
+    """L with A = L L^T (A SPD), model-guided."""
+    n = _check_square("A", A)
+    t = tuner or default_tuner()
+    devs = list(devices) if devices is not None else jax.devices()
+    plan = t.plan("cholesky", n, devices=devs, dtype=_dtype_key(A),
+                  local_kernel=local_kernel)
+    return execute(plan, A, devices=devs)

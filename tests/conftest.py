@@ -1,12 +1,106 @@
 """Test configuration.  NOTE: no XLA_FLAGS here — single-device tests must
 see 1 device (multi-device tests spawn subprocesses with their own flags).
+
+``hypothesis`` is an *optional* dependency: when it is missing we install a
+small shim into ``sys.modules`` before any test module imports it.  The
+shim degrades ``@given`` property tests to deterministic fixed-example
+runs (a handful of boundary/representative samples per strategy) so the
+suite still collects and exercises every invariant.
 """
+import itertools
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import types
+
+    class _Strategy:
+        """A fixed, deterministic sample set standing in for a strategy."""
+
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    def _integers(min_value=0, max_value=1 << 16):
+        lo, hi = int(min_value), int(max_value)
+        mid = lo + (hi - lo) // 2
+        samples = sorted({lo, mid, hi, min(lo + 1, hi), max(hi - 1, lo)})
+        return _Strategy(samples)
+
+    def _sampled_from(elements):
+        return _Strategy(list(elements))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(sorted({lo, (lo + hi) / 2.0, hi}))
+
+    def _booleans():
+        return _Strategy([False, True])
+
+    class _Unsatisfied(Exception):
+        """Raised by the shim's assume() to discard the current example."""
+
+    def _given(*gargs, **gkwargs):
+        if gargs:
+            raise TypeError("hypothesis shim supports keyword strategies only")
+
+        def deco(fn):
+            import functools
+            import inspect
+
+            names = list(gkwargs)
+            pools = [gkwargs[n].samples for n in names]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # Cap the cartesian product so shimmed runs stay fast.
+                for combo in itertools.islice(itertools.product(*pools), 64):
+                    try:
+                        fn(*args, **dict(zip(names, combo)), **kwargs)
+                    except _Unsatisfied:
+                        continue  # assume() rejected this example
+
+            # Hide the strategy parameters from pytest's fixture resolution:
+            # drop __wrapped__ (inspect.signature follows it) and expose a
+            # signature without the @given-supplied names.
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for p in sig.parameters.values() if p.name not in names])
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return deco
+
+    def _settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def _assume(cond):
+        if not cond:
+            raise _Unsatisfied
+        return True
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    _hyp.assume = _assume
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 def pytest_addoption(parser):

@@ -37,6 +37,52 @@ class TestEngine:
         assert out.shape == (1, 8)
         assert (out >= 0).all() and (out < cfg.vocab_size).all()
 
+    def test_chunked_prefill_matches_per_token(self):
+        cfg = get("qwen1.5-4b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        assert model.supports_chunked_prefill
+        prompts = jnp.asarray(
+            np.random.default_rng(0).integers(1, cfg.vocab_size, (2, 21)),
+            jnp.int32)
+        ref = Engine(model, params, ServeConfig(max_new_tokens=4,
+                                                max_cache_len=64,
+                                                prefill_chunk=1))
+        chunked = Engine(model, params, ServeConfig(max_new_tokens=4,
+                                                    max_cache_len=64))
+        assert chunked._prefill_chunk(21) > 1
+        assert np.array_equal(np.asarray(ref.generate(prompts)),
+                              np.asarray(chunked.generate(prompts)))
+
+    def test_chunked_prefill_respects_ring_buffer(self):
+        """A chunk must never straddle the KV ring boundary: a prompt
+        longer than max_cache_len prefills chunked up to the boundary and
+        per-token beyond it, matching the per-token path exactly."""
+        cfg = get("qwen1.5-4b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompts = jnp.asarray(
+            np.random.default_rng(1).integers(1, cfg.vocab_size, (1, 40)),
+            jnp.int32)
+        ref = Engine(model, params, ServeConfig(max_new_tokens=3,
+                                                max_cache_len=24,
+                                                prefill_chunk=1))
+        chunked = Engine(model, params, ServeConfig(max_new_tokens=3,
+                                                    max_cache_len=24,
+                                                    prefill_chunk=16))
+        assert np.array_equal(np.asarray(ref.generate(prompts)),
+                              np.asarray(chunked.generate(prompts)))
+
+    def test_explicit_chunk_clamped_for_recurrent_arch(self):
+        cfg = get("xlstm-350m").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        eng = Engine(model, params, ServeConfig(max_new_tokens=2,
+                                                max_cache_len=32,
+                                                prefill_chunk=8))
+        assert not model.supports_chunked_prefill
+        assert eng._prefill_chunk(16) == 1
+
 
 class TestContentionSimulator:
     def test_distance_zero_is_free(self):
