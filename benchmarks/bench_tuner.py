@@ -8,7 +8,11 @@ Measures the three costs the autotuning layer introduces or removes:
   pre-built executor directly,
 
 plus the model-predicted and measured speedup of the auto-selected variant
-against the worst feasible one — the paper's variant-selection payoff.
+against the worst feasible one — the paper's variant-selection payoff —
+and (``model_eval`` key, also emitted as ``BENCH_model_eval.json``) the
+throughput of one vectorized cost-IR pass over a >=200-scenario
+``(n, p, c)`` grid versus the same grid evaluated with per-scenario
+scalar calls.
 
 Prints a single JSON object on the last stdout line.
 """
@@ -29,6 +33,36 @@ def _best_of(fn, reps: int = 5) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def bench_model_eval(tuner) -> dict:
+    """Vectorized-vs-scalar model-evaluation throughput on a Hopper-scale
+    scenario grid (no jax involvement: pure numpy model math)."""
+    reg = tuner.registry
+    ctx = reg.context("hopper-cray-xe6")
+    ns = np.array([4096.0, 8192.0, 16384.0, 32768.0, 65536.0, 131072.0,
+                   262144.0, 524288.0])
+    ps = np.array([16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0])
+    cs = np.array([1.0, 2.0, 4.0, 8.0])
+    Ng, Pg, Cg = (a.ravel() for a in np.meshgrid(ns, ps, cs, indexing="ij"))
+    out = {"scenarios": int(Ng.size), "models": {}}
+    for algo, variant in (("cannon", "2.5d_ovlp"), ("summa", "2.5d"),
+                          ("trsm", "2.5d"), ("cholesky", "2.5d_ovlp"),
+                          ("lu", "2.5d")):
+        vec_s = _best_of(lambda: reg.evaluate_grid(
+            ctx, algo, variant, Ng, Pg, Cg, 2.0), reps=3)
+        scal_s = _best_of(lambda: [
+            reg.evaluate(ctx, algo, variant, int(n), int(p), c=int(c), r=2)
+            for n, p, c in zip(Ng, Pg, Cg)], reps=3)
+        out["models"][f"{algo}/{variant}"] = {
+            "vectorized_us": vec_s * 1e6,
+            "scalar_loop_us": scal_s * 1e6,
+            "speedup": scal_s / vec_s,
+        }
+    speedups = [m["speedup"] for m in out["models"].values()]
+    out["min_speedup"] = min(speedups)
+    out["geomean_speedup"] = float(np.exp(np.mean(np.log(speedups))))
+    return out
 
 
 def main() -> dict:
@@ -102,6 +136,9 @@ def main() -> dict:
     out["measured_speedup_auto_vs_worst"] = worst_meas / total
     out["auto"] = f"{plan.algo}/{plan.variant} p={plan.p} c={plan.c}"
     out["worst"] = f"{worst_plan.algo}/{worst_plan.variant} p={worst_plan.p} c={worst_plan.c}"
+
+    # --- vectorized vs scalar model-evaluation throughput ------------------
+    out["model_eval"] = bench_model_eval(tuner)
     return out
 
 

@@ -34,8 +34,9 @@ def main() -> dict:
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
-    from repro.core import (AlgoContext, CommModel, IdentityCalibration,
-                            CalibrationTable, evaluate)
+    from repro.core import (AlgoContext, CommModel, CalibrationTable,
+                            evaluate)
+    from repro.perf import EvalOptions
     from repro.core.calibration import (bench_ping, fit_alpha_beta,
                                         measured_compute_model)
     from repro.linalg import ALGORITHMS, distribute
@@ -69,8 +70,9 @@ def main() -> dict:
         avg[float(d)] = max(1.0, wall / ideal)
         mx[(float(p2d), float(d))] = max(1.0, wall / ideal)
     cal = CalibrationTable(avg=avg, mx=mx, extrapolation_degree=1)
+    # One context; est_Cal vs est_NoCal are evaluation options, not
+    # rebuilt calibration surfaces.
     ctx_cal = AlgoContext(CommModel(machine, cal), comp)
-    ctx_nocal = AlgoContext(CommModel(machine, IdentityCalibration()), comp)
 
     # --- 2. run + 3. compare ------------------------------------------------
     # block size must be large enough that compute amortizes dispatch
@@ -97,7 +99,8 @@ def main() -> dict:
         else:
             meas = _measure(lambda: fn(Sd, mesh=mesh))
         est_c = evaluate(ctx_cal, algo, variant, n, p2d, r=1).total
-        est_n = evaluate(ctx_nocal, algo, variant, n, p2d, r=1).total
+        est_n = evaluate(ctx_cal, algo, variant, n, p2d, r=1,
+                         options=EvalOptions("nocal")).total
         results[f"{algo}_{variant}"] = {
             "measured_s": meas, "est_cal_s": est_c, "est_nocal_s": est_n,
             "cal_rel_err": abs(est_c - meas) / meas,

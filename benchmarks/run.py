@@ -125,6 +125,12 @@ def bench_tuner():
          f"overhead={res['dispatch_overhead_us']:.0f}us "
          f"pred_speedup={res['predicted_speedup_auto_vs_worst']:.2f} "
          f"auto={res['auto']}")
+    me = res["model_eval"]
+    _save("BENCH_model_eval", me)
+    emit("model_eval_vectorized", 0.0,
+         f"scenarios={me['scenarios']} "
+         f"min_speedup={me['min_speedup']:.1f}x "
+         f"geomean_speedup={me['geomean_speedup']:.1f}x")
 
 
 def bench_kernels():

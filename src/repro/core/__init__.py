@@ -5,13 +5,18 @@ train/serve steps on TPU meshes).
 Layout:
   machine.py      machine constants (Hopper Cray XE6, TPU v5e, CPU host)
   perfmodel.py    alpha-beta + calibration-factor primitives (paper §IV)
-  collectives.py  analytic collective models (paper §V)
-  algorithms.py   the 16 algorithm-variant models (paper §V)
+  collectives.py  analytic collective models (paper §V, scalar closed forms)
+  algorithms.py   scalar shims over the cost-IR algorithm models (§V);
+                  the models themselves are authored in repro.perf.models
   calibration.py  portable benchmarks + fitting (paper §IV, Figs. 1-4)
-  predictor.py    variant selection + prediction tables (paper §VI)
+  predictor.py    variant selection + prediction tables (paper §VI),
+                  batched through the vectorized cost-IR evaluator
   roofline.py     3-term TPU roofline from compiled HLO (§Roofline)
   hlo.py          structural HLO parsing (trip-count-corrected costs)
   lm_model.py     the methodology applied to LM steps (beyond-paper)
+
+The cost-IR itself (nodes, symbolic scenario parameters, the vectorized
+evaluator) lives in the sibling package ``repro.perf``.
 """
 
 from .machine import CPU_HOST, HOPPER, MACHINES, TPU_V5E, Machine

@@ -1,40 +1,29 @@
-"""The paper's algorithm-level performance models (§V), all 16 variants:
+"""Scalar shims over the cost-IR algorithm models (paper §V).
 
-    {cannon, summa, trsm, cholesky} x {2d, 2.5d} x {+-overlap}
+.. deprecated::
+   The 16 closed-form model functions that used to live here
+   (``cannon_2d`` ... ``cholesky_25d_ovlp``) are now *authored* as
+   declarative cost-IR programs in ``repro.perf.models`` and *evaluated*
+   by ``repro.perf.evaluate`` — vectorized over scenario grids for batch
+   consumers, scalar here.  The module-level functions, ``MODELS`` and
+   ``evaluate`` remain as thin shims for one release so existing call
+   sites keep working; new code should use
+   ``repro.tuner.PerfModelRegistry.evaluate_grid`` or
+   ``repro.perf.evaluate_program`` directly.
 
-Each model walks the algorithm's execution flow (divide-and-conquer over the
-loop structure), charging ``T_rout`` for local computation, ``T_comm`` /
-``T_comm_sync`` for point-to-point transfers and the collective models of
-``core.collectives`` for MPI-style collectives.  Overlapped segments are
-charged ``max(comm, comp)`` (paper §IV: "the models predict the execution
-time as the maximum expected completion time of each individual operation").
-
-Transcription notes (deviations from the printed equations, all documented
-in DESIGN.md):
-
-* **Cannon/SUMMA 2.5D step count** — the printed loop bound ``sqrt(p/c)-1``
-  contradicts the paper's own text ("there are only sqrt(p)/c shifts") and
-  the 2.5D lower bound O(n^2/sqrt(c p)) it cites: a ``sqrt(p/c)``-step loop
-  with blocks of ``n/sqrt(p/c)`` would move *more* words than 2D, not fewer.
-  We use ``s = sqrt(p/c)/c`` steps per layer (Solomonik & Demmel), which
-  reproduces the cited volume and degenerates exactly to 2D at ``c=1``.
-* **TRSM trailing-update multiplicity** — we multiply the per-iteration
-  dgemm term by the ``r`` row-blocks a process owns (the printed equation's
-  parenthesization is ambiguous); this choice conserves total flops
-  (sums to n^3/p per process).
-* ``t-1`` threads during overlap (one thread dedicated to communication)
-  follows the paper; ``ComputeModel`` clamps at 1 thread, so on TPU
-  (1 "thread" = the chip, comms via async DMA) overlap carries no compute
-  penalty.
+The transcription deviations from the printed paper (2.5D step count,
+TRSM update multiplicity, collective volumes, overlap thread accounting)
+are documented in DESIGN.md §1 and pinned by the golden fixtures in
+``tests/golden/model_values.json``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, Optional
 
-from . import collectives as coll
+from ..perf import EvalOptions, PROGRAMS, evaluate_program
+from ..perf.models import USEFUL_FLOPS  # noqa: F401  (re-export, back-compat)
 from .perfmodel import CommModel, ComputeModel
 
 
@@ -54,7 +43,9 @@ class ModelResult:
 
     ``comm``/``comp`` are the *serialized* sums of each class of term;
     ``total`` accounts for overlap (max-composition), so
-    ``total <= comm + comp`` always holds.
+    ``total <= comm + comp`` always holds.  ``terms`` is the scalar
+    back-compat view of the structured per-phase breakdown
+    (``repro.perf.EvalResult.phases``).
     """
 
     total: float
@@ -69,14 +60,6 @@ class ModelResult:
     r: int = 1
 
 
-USEFUL_FLOPS = {
-    "cannon": lambda n: 2.0 * n ** 3,
-    "summa": lambda n: 2.0 * n ** 3,
-    "trsm": lambda n: 1.0 * n ** 3,
-    "cholesky": lambda n: n ** 3 / 3.0,
-}
-
-
 def pct_of_peak(ctx: AlgoContext, res: ModelResult) -> float:
     """Percentage of machine peak achieved (the paper's reporting metric)."""
     flops = USEFUL_FLOPS[res.algo](res.n)
@@ -84,405 +67,69 @@ def pct_of_peak(ctx: AlgoContext, res: ModelResult) -> float:
     return 100.0 * flops / (res.total * peak)
 
 
-class _Acc:
-    """Accumulates model terms, tracking comm/comp classes and overlap."""
-
-    def __init__(self):
-        self.total = 0.0
-        self.comm = 0.0
-        self.comp = 0.0
-        self.terms: Dict[str, float] = {}
-
-    def add(self, name: str, seconds: float, kind: str, repeat: float = 1.0):
-        s = seconds * repeat
-        self.total += s
-        if kind == "comm":
-            self.comm += s
-        else:
-            self.comp += s
-        self.terms[name] = self.terms.get(name, 0.0) + s
-
-    def add_overlapped(self, name: str, comm_s: float, comp_s: float,
-                       repeat: float = 1.0):
-        """max(comm, comp), tracked into both serialized ledgers."""
-        self.total += max(comm_s, comp_s) * repeat
-        self.comm += comm_s * repeat
-        self.comp += comp_s * repeat
-        self.terms[name] = self.terms.get(name, 0.0) + max(comm_s, comp_s) * repeat
-
-    def result(self, **meta) -> ModelResult:
-        return ModelResult(self.total, self.comm, self.comp, dict(self.terms), **meta)
+def result_from_eval(program, res, n, p, c, r, idx=None) -> ModelResult:
+    """Convert one perf.EvalResult cell to the legacy ModelResult, echoing
+    only the tuning parameters the model reads.  ``idx`` selects one cell
+    of a vectorized result; ``None`` reads a 0-d (scalar) result."""
+    pick = float if idx is None else (lambda a: float(a[idx]))
+    return ModelResult(
+        pick(res.total), pick(res.comm), pick(res.comp),
+        {name: pick(ph.exposed) for name, ph in res.phases.items()},
+        algo=program.algo, variant=program.variant, n=n, p=p,
+        c=c if program.uses_c else 1, r=r if program.uses_r else 1)
 
 
-def _grid(p: float, c: float) -> float:
-    g = math.sqrt(p / c)
-    if abs(g - round(g)) > 1e-9:
-        g = math.sqrt(p / c)  # non-square grids are allowed in the model
-    return g
+def scalar_shim(program) -> "ModelFn":
+    def fn(ctx: AlgoContext, n: int, p: int,
+           c: int = program.default_c, r: int = program.default_r,
+           options: Optional[EvalOptions] = None) -> ModelResult:
+        res = evaluate_program(program, ctx, n, p, c, r, options=options)
+        return result_from_eval(program, res, n, p, c, r)
 
+    fn.__name__ = f"{program.algo}_{program.variant}".replace(".", "")
+    fn.__doc__ = (f"Deprecated shim: scalar evaluation of the "
+                  f"({program.algo}, {program.variant}) cost-IR program.")
+    fn.program = program
+    return fn
 
-# ---------------------------------------------------------------------------
-# Cannon's algorithm (paper §V-A)
-# ---------------------------------------------------------------------------
-
-
-def cannon_2d(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c, r
-    sp = math.sqrt(p)
-    bs = n / sp
-    w = bs * bs
-    t = ctx.threads
-    a = _Acc()
-    a.add("shift_row", ctx.comm.t_comm_sync(p, w, 1), "comm", repeat=sp)
-    a.add("shift_col", ctx.comm.t_comm_sync(p, w, sp), "comm", repeat=sp)
-    a.add("dgemm", ctx.comp.t_rout("dgemm", bs, t), "comp", repeat=sp)
-    return a.result(algo="cannon", variant="2d", n=n, p=p)
-
-
-def cannon_2d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c, r
-    sp = math.sqrt(p)
-    bs = n / sp
-    w = bs * bs
-    t = ctx.threads
-    shift = ctx.comm.t_comm_sync(p, w, 1) + ctx.comm.t_comm_sync(p, w, sp)
-    mult = ctx.comp.t_rout("dgemm", bs, t)
-    a = _Acc()
-    a.add("first_shift", shift, "comm")
-    a.add("final_dgemm", mult, "comp")
-    a.add_overlapped("loop", shift, mult, repeat=sp - 1)
-    return a.result(algo="cannon", variant="2d_ovlp", n=n, p=p)
-
-
-def _cannon_25d_steps(p: float, c: float) -> float:
-    """Shift steps per layer; see transcription note in the module docstring."""
-    return max(1.0, math.sqrt(p / c) / c)
-
-
-def cannon_25d(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 1) -> ModelResult:
-    del r
-    g = _grid(p, c)
-    bs = n / g
-    w = bs * bs
-    t = ctx.threads
-    s = _cannon_25d_steps(p, c)
-    a = _Acc()
-    a.add("ini_repl", coll.t_inirepl(ctx.comm, p, w, c), "comm")
-    # Loop shifts use the average factor, as printed in the paper's 2.5D model.
-    a.add("shift_row", ctx.comm.t_comm(w, 1), "comm", repeat=s - 1)
-    a.add("shift_col", ctx.comm.t_comm(w, g), "comm", repeat=s - 1)
-    a.add("dgemm", ctx.comp.t_rout("dgemm", bs, t), "comp", repeat=s)
-    a.add("reduce", coll.t_reduce(ctx.comm, p, c, w, p / c), "comm")
-    return a.result(algo="cannon", variant="2.5d", n=n, p=p, c=c)
-
-
-def cannon_25d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 1) -> ModelResult:
-    del r
-    g = _grid(p, c)
-    bs = n / g
-    w = bs * bs
-    t = ctx.threads
-    s = _cannon_25d_steps(p, c)
-    shift = ctx.comm.t_comm(w, 1) + ctx.comm.t_comm(w, g)
-    mult = ctx.comp.t_rout("dgemm", bs, t)
-    a = _Acc()
-    a.add("ini_repl", coll.t_inirepl(ctx.comm, p, w, c), "comm")
-    a.add_overlapped("loop", shift, mult, repeat=s - 1)
-    a.add("final_dgemm", mult, "comp")
-    a.add("reduce", coll.t_reduce(ctx.comm, p, c, w, p / c), "comm")
-    return a.result(algo="cannon", variant="2.5d_ovlp", n=n, p=p, c=c)
-
-
-# ---------------------------------------------------------------------------
-# SUMMA (constructed with the paper's methodology; the paper models it but
-# prints only Cannon/TRSM in detail).  Panel broadcasts along grid rows
-# (distance 1) and columns (distance sqrt(p)).
-# ---------------------------------------------------------------------------
-
-
-def summa_2d(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c, r
-    sp = math.sqrt(p)
-    bs = n / sp
-    w = bs * bs
-    t = ctx.threads
-    a = _Acc()
-    a.add("bcast_A", coll.t_bcast_sync(ctx.comm, p, sp, w, 1), "comm", repeat=sp)
-    a.add("bcast_B", coll.t_bcast_sync(ctx.comm, p, sp, w, sp), "comm", repeat=sp)
-    a.add("dgemm", ctx.comp.t_rout("dgemm", bs, t), "comp", repeat=sp)
-    return a.result(algo="summa", variant="2d", n=n, p=p)
-
-
-def summa_2d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c, r
-    sp = math.sqrt(p)
-    bs = n / sp
-    w = bs * bs
-    t = ctx.threads
-    bcasts = (coll.t_bcast_sync(ctx.comm, p, sp, w, 1)
-              + coll.t_bcast_sync(ctx.comm, p, sp, w, sp))
-    mult = ctx.comp.t_rout("dgemm", bs, t)
-    a = _Acc()
-    a.add("first_bcasts", bcasts, "comm")
-    a.add_overlapped("loop", bcasts, mult, repeat=sp - 1)
-    a.add("final_dgemm", mult, "comp")
-    return a.result(algo="summa", variant="2d_ovlp", n=n, p=p)
-
-
-def summa_25d(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 1) -> ModelResult:
-    del r
-    g = _grid(p, c)
-    bs = n / g
-    w = bs * bs
-    t = ctx.threads
-    s = _cannon_25d_steps(p, c)
-    a = _Acc()
-    a.add("ini_repl", coll.t_inirepl(ctx.comm, p, w, c), "comm")
-    a.add("bcast_A", coll.t_bcast(ctx.comm, p, g, w, 1), "comm", repeat=s)
-    a.add("bcast_B", coll.t_bcast(ctx.comm, p, g, w, g), "comm", repeat=s)
-    a.add("dgemm", ctx.comp.t_rout("dgemm", bs, t), "comp", repeat=s)
-    a.add("reduce", coll.t_reduce(ctx.comm, p, c, w, p / c), "comm")
-    return a.result(algo="summa", variant="2.5d", n=n, p=p, c=c)
-
-
-def summa_25d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 1) -> ModelResult:
-    del r
-    g = _grid(p, c)
-    bs = n / g
-    w = bs * bs
-    t = ctx.threads
-    s = _cannon_25d_steps(p, c)
-    bcasts = (coll.t_bcast(ctx.comm, p, g, w, 1)
-              + coll.t_bcast(ctx.comm, p, g, w, g))
-    mult = ctx.comp.t_rout("dgemm", bs, t)
-    a = _Acc()
-    a.add("ini_repl", coll.t_inirepl(ctx.comm, p, w, c), "comm")
-    a.add("first_bcasts", bcasts, "comm")
-    a.add_overlapped("loop", bcasts, mult, repeat=s - 1)
-    a.add("final_dgemm", mult, "comp")
-    a.add("reduce", coll.t_reduce(ctx.comm, p, c, w, p / c), "comm")
-    return a.result(algo="summa", variant="2.5d_ovlp", n=n, p=p, c=c)
-
-
-# ---------------------------------------------------------------------------
-# Triangular solve (paper §V-B).  Block-cyclic with r blocks/process/dim.
-# ---------------------------------------------------------------------------
-
-
-def _sum_decreasing(nb: float, offset: float = 0.0) -> float:
-    """sum_{i=0}^{nb-1} (nb - i - offset)  — closed form, keeps the models
-    O(1) so the calibration fit can call them millions of times."""
-    k = int(round(nb))
-    return k * nb - (k - 1) * k / 2.0 - offset * k
-
-
-def trsm_2d(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c
-    sp = math.sqrt(p)
-    nb = r * sp                      # blocks per matrix dimension
-    bs = n / nb
-    w = bs * bs
-    t = ctx.threads
-    k = int(round(nb))
-    a = _Acc()
-    a.add("bcast_U", coll.t_bcast_sync(ctx.comm, p, sp, w, sp), "comm",
-          repeat=_sum_decreasing(nb) / sp)
-    a.add("dtrsm", r * ctx.comp.t_rout("dtrsm", bs, t), "comp", repeat=k)
-    a.add("bcast_X", r * coll.t_bcast(ctx.comm, p, sp, w, 1), "comm", repeat=k)
-    a.add("update", r * ctx.comp.t_rout("dgemm", bs, t), "comp",
-          repeat=_sum_decreasing(nb, 1.0) / sp)
-    a.add("last_bcast_U", coll.t_bcast_sync(ctx.comm, p, sp, w, sp), "comm")
-    a.add("last_solve", r * ctx.comp.t_rout("dtrsm", bs, t), "comp")
-    return a.result(algo="trsm", variant="2d", n=n, p=p, r=r)
-
-
-def trsm_2d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 1) -> ModelResult:
-    del c
-    sp = math.sqrt(p)
-    nb = r * sp
-    bs = n / nb
-    w = bs * bs
-    t = ctx.threads
-    k = int(round(nb))
-    a = _Acc()
-    a.add("first_bcast_U", r * coll.t_bcast_sync(ctx.comm, p, sp, w, sp), "comm")
-    a.add("dtrsm", r * ctx.comp.t_rout("dtrsm", bs, t - 1), "comp", repeat=k)
-    a.add("bcast_X", r * coll.t_bcast(ctx.comm, p, sp, w, 1), "comm", repeat=k)
-    # per-iteration: ((nb-i-1)/sp) * max(bcast_U, r*dgemm) — coefficient is
-    # linear in i, so the sum collapses.
-    bc = coll.t_bcast_sync(ctx.comm, p, sp, w, sp)
-    up = r * ctx.comp.t_rout("dgemm", bs, t - 1)
-    a.add_overlapped("bcastU_vs_update", bc, up, repeat=_sum_decreasing(nb, 1.0) / sp)
-    a.add("last_solve", r * ctx.comp.t_rout("dtrsm", bs, t - 1), "comp")
-    return a.result(algo="trsm", variant="2d_ovlp", n=n, p=p, r=r)
-
-
-def trsm_25d(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 2) -> ModelResult:
-    g = _grid(p, c)
-    nb = r * g
-    bs = n / nb
-    w = bs * bs
-    t = ctx.threads
-    k = int(round(nb))
-    a = _Acc()
-    # Initial distribution: U replicated along layers (3/4: upper triangle),
-    # X/B rows scattered among layers (paper §V-B).
-    a.add("repl_U", r * r * 0.75 * coll.t_bcast(ctx.comm, p, c, w, p / c), "comm")
-    a.add("scatter_X", r * r * coll.t_scatter_sync(ctx.comm, p, c, w / c, p / c), "comm")
-    a.add("bcast_U", coll.t_bcast_sync(ctx.comm, p, g, w, g), "comm",
-          repeat=_sum_decreasing(nb) / g)
-    a.add("dtrsm", (r / c) * ctx.comp.t_rout("dtrsm", bs, t), "comp", repeat=k)
-    a.add("bcast_X", (r / c) * coll.t_bcast(ctx.comm, p, g, w, 1), "comm", repeat=k)
-    a.add("update", (r / c) * ctx.comp.t_rout("dgemm", bs, t), "comp",
-          repeat=_sum_decreasing(nb, 1.0) / g)
-    a.add("last_bcast_U", coll.t_bcast_sync(ctx.comm, p, g, w, g), "comm")
-    a.add("last_solve", (r / c) * ctx.comp.t_rout("dtrsm", bs, t), "comp")
-    a.add("gather_X", r * r * coll.t_gather(ctx.comm, c, w, p / c), "comm")
-    return a.result(algo="trsm", variant="2.5d", n=n, p=p, c=c, r=r)
-
-
-def trsm_25d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 2) -> ModelResult:
-    g = _grid(p, c)
-    nb = r * g
-    bs = n / nb
-    w = bs * bs
-    t = ctx.threads
-    k = int(round(nb))
-    a = _Acc()
-    a.add("repl_U", r * r * 0.75 * coll.t_bcast(ctx.comm, p, c, w, p / c), "comm")
-    a.add("scatter_X", r * r * coll.t_scatter_sync(ctx.comm, p, c, w / c, p / c), "comm")
-    a.add("first_bcast_U", r * coll.t_bcast_sync(ctx.comm, p, g, w, g), "comm")
-    a.add("dtrsm", (r / c) * ctx.comp.t_rout("dtrsm", bs, t - 1), "comp", repeat=k)
-    a.add("bcast_X", (r / c) * coll.t_bcast(ctx.comm, p, g, w, 1), "comm", repeat=k)
-    bc = coll.t_bcast_sync(ctx.comm, p, g, w, g)
-    up = (r / c) * ctx.comp.t_rout("dgemm", bs, t - 1)
-    a.add_overlapped("bcastU_vs_update", bc, up, repeat=_sum_decreasing(nb, 1.0) / g)
-    a.add("last_solve", (r / c) * ctx.comp.t_rout("dtrsm", bs, t - 1), "comp")
-    a.add("gather_X", r * r * coll.t_gather(ctx.comm, c, w, p / c), "comm")
-    return a.result(algo="trsm", variant="2.5d_ovlp", n=n, p=p, c=c, r=r)
-
-
-# ---------------------------------------------------------------------------
-# Cholesky factorization (constructed with the paper's methodology; blocked
-# right-looking, block-cyclic layout with r blocks/process/dim).
-# ---------------------------------------------------------------------------
-
-
-def _cholesky_loop(ctx: AlgoContext, a: _Acc, p: float, g: float, nb: float,
-                   bs: float, t: int, overlap: bool, c: float = 1.0):
-    """Right-looking loop over k = nb block-columns; trailing size
-    m_i = nb-i-1 makes every coefficient a polynomial in i, so the loop
-    collapses to closed-form sums (the fit calls this O(1e6) times)."""
-    w = bs * bs
-    k = int(round(nb))
-    tt = t - 1 if overlap else t
-    sum_m = _sum_decreasing(nb, 1.0)                      # sum m_i
-    sum_m2 = (k - 1) * k * (2 * k - 1) / 6.0              # sum m_i^2
-    a.add("dpotrf", ctx.comp.t_rout("dpotrf", bs, tt), "comp", repeat=k)
-    a.add("bcast_diag", coll.t_bcast_sync(ctx.comm, p, g, w, g), "comm", repeat=k)
-    a.add("panel_dtrsm", ctx.comp.t_rout("dtrsm", bs, tt), "comp", repeat=sum_m / g)
-    panel_unit = (coll.t_bcast(ctx.comm, p, g, w, 1)
-                  + coll.t_bcast(ctx.comm, p, g, w, g)) / g     # per unit m
-    upd_unit = ctx.comp.t_rout("dgemm", bs, tt) / (2.0 * p)     # per unit m^2
-    if overlap:
-        # per-iteration max(panel_unit*m, upd_unit*m^2): crossover at
-        # m* = panel_unit/upd_unit; above it update dominates.
-        mstar = panel_unit / upd_unit if upd_unit > 0 else float("inf")
-        comm_tot = comp_tot = exposed = 0.0
-        # m runs over 0..k-1
-        m_hi = min(k - 1, int(math.floor(mstar)))
-        # below/at crossover: panel dominates -> sum of m for m<=m_hi
-        s1 = m_hi * (m_hi + 1) / 2.0
-        s2 = sum_m2 - m_hi * (m_hi + 1) * (2 * m_hi + 1) / 6.0
-        exposed = panel_unit * s1 + upd_unit * s2
-        comm_tot = panel_unit * sum_m
-        comp_tot = upd_unit * sum_m2
-        a.total += exposed
-        a.comm += comm_tot
-        a.comp += comp_tot
-        a.terms["panelbcast_vs_update"] = a.terms.get("panelbcast_vs_update", 0.0) + exposed
-    else:
-        a.add("panel_bcast", panel_unit, "comm", repeat=sum_m)
-        a.add("update", upd_unit, "comp", repeat=sum_m2)
-    if c > 1.0:
-        # Periodic combination of partial trailing updates across layers.
-        a.add("layer_reduce", coll.t_reduce(ctx.comm, p, c, w, p / c), "comm",
-              repeat=sum_m / (g * c))
-
-
-def cholesky_2d(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 2) -> ModelResult:
-    del c
-    sp = math.sqrt(p)
-    nb = r * sp
-    bs = n / nb
-    a = _Acc()
-    _cholesky_loop(ctx, a, p, sp, nb, bs, ctx.threads, overlap=False)
-    return a.result(algo="cholesky", variant="2d", n=n, p=p, r=r)
-
-
-def cholesky_2d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 1, r: int = 2) -> ModelResult:
-    del c
-    sp = math.sqrt(p)
-    nb = r * sp
-    bs = n / nb
-    a = _Acc()
-    _cholesky_loop(ctx, a, p, sp, nb, bs, ctx.threads, overlap=True)
-    return a.result(algo="cholesky", variant="2d_ovlp", n=n, p=p, r=r)
-
-
-def cholesky_25d(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 2) -> ModelResult:
-    g = _grid(p, c)
-    nb = r * g
-    bs = n / nb
-    w = bs * bs
-    a = _Acc()
-    a.add("repl_A", 0.5 * r * r * coll.t_bcast(ctx.comm, p, c, w, p / c), "comm")
-    _cholesky_loop(ctx, a, p, g, nb, bs, ctx.threads, overlap=False, c=c)
-    a.add("gather_L", 0.5 * r * r * coll.t_gather(ctx.comm, c, w, p / c), "comm")
-    return a.result(algo="cholesky", variant="2.5d", n=n, p=p, c=c, r=r)
-
-
-def cholesky_25d_ovlp(ctx: AlgoContext, n: int, p: int, c: int = 4, r: int = 2) -> ModelResult:
-    g = _grid(p, c)
-    nb = r * g
-    bs = n / nb
-    w = bs * bs
-    a = _Acc()
-    a.add("repl_A", 0.5 * r * r * coll.t_bcast(ctx.comm, p, c, w, p / c), "comm")
-    _cholesky_loop(ctx, a, p, g, nb, bs, ctx.threads, overlap=True, c=c)
-    a.add("gather_L", 0.5 * r * r * coll.t_gather(ctx.comm, c, w, p / c), "comm")
-    return a.result(algo="cholesky", variant="2.5d_ovlp", n=n, p=p, c=c, r=r)
-
-
-# ---------------------------------------------------------------------------
-# Registry
-# ---------------------------------------------------------------------------
 
 ModelFn = Callable[..., ModelResult]
 
+#: (algo, variant) -> scalar shim over the registered cost-IR program
 MODELS: Dict[tuple[str, str], ModelFn] = {
-    ("cannon", "2d"): cannon_2d,
-    ("cannon", "2d_ovlp"): cannon_2d_ovlp,
-    ("cannon", "2.5d"): cannon_25d,
-    ("cannon", "2.5d_ovlp"): cannon_25d_ovlp,
-    ("summa", "2d"): summa_2d,
-    ("summa", "2d_ovlp"): summa_2d_ovlp,
-    ("summa", "2.5d"): summa_25d,
-    ("summa", "2.5d_ovlp"): summa_25d_ovlp,
-    ("trsm", "2d"): trsm_2d,
-    ("trsm", "2d_ovlp"): trsm_2d_ovlp,
-    ("trsm", "2.5d"): trsm_25d,
-    ("trsm", "2.5d_ovlp"): trsm_25d_ovlp,
-    ("cholesky", "2d"): cholesky_2d,
-    ("cholesky", "2d_ovlp"): cholesky_2d_ovlp,
-    ("cholesky", "2.5d"): cholesky_25d,
-    ("cholesky", "2.5d_ovlp"): cholesky_25d_ovlp,
+    key: scalar_shim(prog) for key, prog in PROGRAMS.items()
 }
 
+# Deprecated module-level names, kept for one release.
+cannon_2d = MODELS[("cannon", "2d")]
+cannon_2d_ovlp = MODELS[("cannon", "2d_ovlp")]
+cannon_25d = MODELS[("cannon", "2.5d")]
+cannon_25d_ovlp = MODELS[("cannon", "2.5d_ovlp")]
+summa_2d = MODELS[("summa", "2d")]
+summa_2d_ovlp = MODELS[("summa", "2d_ovlp")]
+summa_25d = MODELS[("summa", "2.5d")]
+summa_25d_ovlp = MODELS[("summa", "2.5d_ovlp")]
+trsm_2d = MODELS[("trsm", "2d")]
+trsm_2d_ovlp = MODELS[("trsm", "2d_ovlp")]
+trsm_25d = MODELS[("trsm", "2.5d")]
+trsm_25d_ovlp = MODELS[("trsm", "2.5d_ovlp")]
+cholesky_2d = MODELS[("cholesky", "2d")]
+cholesky_2d_ovlp = MODELS[("cholesky", "2d_ovlp")]
+cholesky_25d = MODELS[("cholesky", "2.5d")]
+cholesky_25d_ovlp = MODELS[("cholesky", "2.5d_ovlp")]
+lu_2d = MODELS[("lu", "2d")]
+lu_25d = MODELS[("lu", "2.5d")]
+
+#: the paper's algorithm/variant matrix (LU is a beyond-paper addition and
+#: is deliberately not listed here; enumerate the registry for everything)
 ALGOS = ("cannon", "summa", "trsm", "cholesky")
 VARIANTS = ("2d", "2d_ovlp", "2.5d", "2.5d_ovlp")
 
 
 def evaluate(ctx: AlgoContext, algo: str, variant: str, n: int, p: int,
-             c: int = 1, r: int = 1) -> ModelResult:
-    return MODELS[(algo, variant)](ctx, n, p, c=c, r=r)
+             c: int = 1, r: int = 1,
+             options: Optional[EvalOptions] = None) -> ModelResult:
+    """Scalar evaluation of one registered model.  ``options`` selects the
+    estimator flavor (est_Cal / est_NoCal / est_ideal) without rebuilding
+    the context — see :class:`repro.perf.EvalOptions`."""
+    return MODELS[(algo, variant)](ctx, n, p, c=c, r=r, options=options)

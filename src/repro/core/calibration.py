@@ -96,8 +96,10 @@ def bench_routines(sizes: Sequence[int] = (128, 256, 512, 1024, 2048),
             "dtrsm": jax.jit(lambda u, b: jax.scipy.linalg.solve_triangular(u, b, lower=False)),
             "dsyrk": jax.jit(lambda x, y: x @ y.T),
             "dpotrf": jax.jit(jnp.linalg.cholesky),
+            "dgetrf": jax.jit(jax.scipy.linalg.lu),
         }
-        args = {"dgemm": (a, a), "dtrsm": (tri, a), "dsyrk": (a, a), "dpotrf": (spd,)}
+        args = {"dgemm": (a, a), "dtrsm": (tri, a), "dsyrk": (a, a),
+                "dpotrf": (spd,), "dgetrf": (spd,)}
         for rout in ROUTINE_FLOPS:
             secs = _time_call(fns[rout], *args[rout])
             results[rout][n] = ROUTINE_FLOPS[rout](n) / secs

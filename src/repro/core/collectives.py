@@ -28,6 +28,12 @@ words, ``d`` the base communication distance between group neighbours.
 We also provide ring-schedule models for TPU ICI (what GSPMD emits on a
 torus axis), with the same calibration hooks — used by the LM-step models
 and the roofline cross-checks.
+
+These closed forms are the scalar reference implementation.  The cost-IR
+(``repro.perf``) ports the same schedules to ``Collective`` nodes with
+vectorized step-masked evaluation; ``tests/test_collectives_properties.py``
+pins the two implementations to each other step-for-step and checks the
+traffic-conservation/monotonicity invariants of both.
 """
 
 from __future__ import annotations

@@ -39,13 +39,25 @@ from .machine import Machine
 
 
 class Calibration:
-    """Interface: C_avg(d) and C_max(p, d), both >= 1."""
+    """Interface: C_avg(d) and C_max(p, d), both >= 1.
+
+    The ``_vec`` variants evaluate elementwise over numpy arrays (the
+    cost-IR evaluator in ``repro.perf`` calls them on whole scenario
+    grids); the default implementations fall back to the scalar methods,
+    subclasses override with closed-form numpy where possible.
+    """
 
     def c_avg(self, d: float) -> float:
         raise NotImplementedError
 
     def c_max(self, p: float, d: float) -> float:
         raise NotImplementedError
+
+    def c_avg_vec(self, d):
+        return np.vectorize(self.c_avg, otypes=[float])(d)
+
+    def c_max_vec(self, p, d):
+        return np.vectorize(self.c_max, otypes=[float])(p, d)
 
 
 class IdentityCalibration(Calibration):
@@ -55,6 +67,12 @@ class IdentityCalibration(Calibration):
         return 1.0
 
     def c_max(self, p: float, d: float) -> float:
+        return 1.0
+
+    def c_avg_vec(self, d):
+        return 1.0
+
+    def c_max_vec(self, p, d):
         return 1.0
 
 
@@ -85,6 +103,17 @@ class ParametricCalibration(Calibration):
         d = max(float(d), 0.0)
         growth = abs(self.b1) * math.log2(p) ** abs(self.b2) * math.log2(1.0 + d) ** abs(self.b3)
         return self.c_avg(d) * (1.0 + growth)
+
+    def c_avg_vec(self, d):
+        d = np.maximum(np.asarray(d, dtype=float), 0.0)
+        return 1.0 + abs(self.a1) * np.log2(1.0 + d) ** abs(self.a2)
+
+    def c_max_vec(self, p, d):
+        p = np.maximum(np.asarray(p, dtype=float), 2.0)
+        d = np.maximum(np.asarray(d, dtype=float), 0.0)
+        growth = (abs(self.b1) * np.log2(p) ** abs(self.b2)
+                  * np.log2(1.0 + d) ** abs(self.b3))
+        return self.c_avg_vec(d) * (1.0 + growth)
 
     def params(self) -> np.ndarray:
         return np.array([self.a1, self.a2, self.b1, self.b2, self.b3])
@@ -158,6 +187,52 @@ class CalibrationTable(Calibration):
         vals = np.array([polyval(c, math.log2(p)) for c in self._poly])
         return max(1.0, self._interp_logd(self._ds, vals, d))
 
+    # -- vectorized surfaces (same math as the scalar methods, elementwise
+    # over numpy arrays — the cost-IR evaluator calls these on whole
+    # scenario grids) -------------------------------------------------------
+    def c_avg_vec(self, d):
+        d = np.maximum(np.asarray(d, dtype=float), float(self._avg_d[0]))
+        x = np.log2(1.0 + d)
+        xs = np.log2(1.0 + self._avg_d)
+        return np.maximum(1.0, np.interp(x, xs, self._avg_v))
+
+    def c_max_vec(self, p, d):
+        p = np.maximum(np.asarray(p, dtype=float), float(self._ps[0]))
+        d = np.asarray(d, dtype=float)
+        p, d = np.broadcast_arrays(p, d)
+        shape = p.shape
+        pf = p.ravel()
+        xs = np.log2(1.0 + self._ds)
+        x = np.log2(1.0 + np.maximum(d.ravel(), float(self._ds[0])))
+        ix = np.arange(pf.size)
+        # in-range: distance-interpolate every measured p row, then lerp in
+        # log2 p between the bracketing rows (as the scalar bilinear path)
+        rows = np.stack([np.interp(x, xs, row) for row in self._grid]) \
+            if pf.size else np.empty((self._ps.size, 0))
+        lo = np.clip(np.searchsorted(self._ps, pf, side="right") - 1,
+                     0, self._ps.size - 1)
+        hi = np.minimum(lo + 1, self._ps.size - 1)
+        vlo, vhi = rows[lo, ix], rows[hi, ix]
+        lp, lps = np.log2(pf), np.log2(self._ps)
+        denom = lps[hi] - lps[lo]
+        t = np.where(denom > 0, (lp - lps[lo]) / np.where(denom > 0, denom, 1.0),
+                     0.0)
+        val = np.where(hi == lo, vlo, vlo + t * (vhi - vlo))
+        # beyond the measured range: per-distance polynomial regression in
+        # log2 p, then the same log-distance interpolation per element
+        beyond = pf > self._ps[-1]
+        if np.any(beyond):
+            vals = np.stack([polyval(c, lp) for c in self._poly])
+            k = np.clip(np.searchsorted(xs, x, side="right") - 1,
+                        0, xs.size - 1)
+            k1 = np.minimum(k + 1, xs.size - 1)
+            y0, y1 = vals[k, ix], vals[k1, ix]
+            dx = xs[k1] - xs[k]
+            tt = np.clip(np.where(dx > 0, (x - xs[k])
+                                  / np.where(dx > 0, dx, 1.0), 0.0), 0.0, 1.0)
+            val = np.where(beyond, y0 + tt * (y1 - y0), val)
+        return np.maximum(1.0, val).reshape(shape)
+
     # -- (de)serialization ---------------------------------------------------
     def to_json(self) -> str:
         return json.dumps({
@@ -209,12 +284,14 @@ class CommModel:
 # Computation model
 # ---------------------------------------------------------------------------
 
-#: flops of each square-block routine at block size n
+#: flops of each square-block routine at block size n (numpy-compatible:
+#: the cost-IR evaluator calls these on whole scenario grids)
 ROUTINE_FLOPS = {
     "dgemm": lambda n: 2.0 * n ** 3,
     "dtrsm": lambda n: 1.0 * n ** 3,
     "dsyrk": lambda n: 1.0 * n ** 3,
     "dpotrf": lambda n: n ** 3 / 3.0,
+    "dgetrf": lambda n: 2.0 * n ** 3 / 3.0,
 }
 
 
@@ -234,13 +311,22 @@ class EfficiencyCurve:
     def __call__(self, n: float) -> float:
         return max(self.eff_min, self.eff_max * (1.0 - math.exp(-float(n) / self.n0)))
 
+    def ev(self, n):
+        """Elementwise over numpy arrays (same curve as ``__call__``)."""
+        n = np.asarray(n, dtype=float)
+        return np.maximum(self.eff_min,
+                          self.eff_max * (1.0 - np.exp(-n / self.n0)))
+
 
 # Digitized from paper Fig. 1 (LibSci on Hopper, 6 threads / NUMA domain).
+# dgetrf is not in Fig. 1; its curve follows dpotrf's shape with the higher
+# plateau of a dgemm-rich panel factorization.
 HOPPER_EFFICIENCY = {
     "dgemm": EfficiencyCurve(0.92, 350.0),
     "dtrsm": EfficiencyCurve(0.85, 500.0),
     "dsyrk": EfficiencyCurve(0.88, 420.0),
     "dpotrf": EfficiencyCurve(0.70, 600.0),
+    "dgetrf": EfficiencyCurve(0.75, 550.0),
 }
 
 # TPU v5e MXU: efficiency driven by tile alignment (128x128 MXU); a block
@@ -251,6 +337,7 @@ TPU_EFFICIENCY = {
     "dtrsm": EfficiencyCurve(0.60, 1024.0),   # tri-solve maps poorly to MXU
     "dsyrk": EfficiencyCurve(0.90, 640.0),
     "dpotrf": EfficiencyCurve(0.45, 1024.0),
+    "dgetrf": EfficiencyCurve(0.50, 1024.0),  # pivot/solve-heavy, like dpotrf
 }
 
 

@@ -25,19 +25,23 @@ import math
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..core import predictor
-from ..core.algorithms import AlgoContext
+from ..core.algorithms import result_from_eval
 from .plan import (ExecutionPlan, PlanCache, machine_fingerprint, plan_key)
 from .registry import DEFAULT_REGISTRY, PerfModelRegistry, machine_for_platform
 
 #: public operation -> candidate algorithm models (matmul races Cannon
-#: against SUMMA; the factorizations map one-to-one)
+#: against SUMMA; the factorizations map one-to-one).  "lu" plans through
+#: the models only (no executable dispatch yet).
 OP_ALGOS: Dict[str, Tuple[str, ...]] = {
     "matmul": ("cannon", "summa"),
     "cannon": ("cannon",),
     "summa": ("summa",),
     "trsm": ("trsm",),
     "cholesky": ("cholesky",),
+    "lu": ("lu",),
 }
 
 
@@ -153,33 +157,55 @@ class Tuner:
             raise ValueError(f"unknown op {op!r}; known: {sorted(OP_ALGOS)}") \
                 from None
         ctx = self.registry.context(machine)
-        best: Optional[Tuple[predictor.VariantChoice, str, int, int, int]] = None
+        # Enumerate every realizable (algo, variant, p, c, g) candidate in
+        # selection-priority order, then score them with ONE vectorized
+        # model evaluation per (algo, variant) instead of a scalar
+        # predictor.select call per grid (the executables use r=1).
+        cands: List[Tuple[str, str, int, int, int]] = []
         for algo in algos:
             all_variants = self.registry.variants(algo)
             for p, c, g in feasible_grids(device_count, algo):
                 kind = "2d" if c == 1 else "2.5d"
-                variants = [v for v in all_variants if v.startswith(kind)]
-                if not variants:
-                    continue
-                try:
-                    choice = predictor.select(ctx, algo, n, p,
-                                              variants=variants,
-                                              c_values=[c], r_values=(1,),
-                                              registry=self.registry)
-                except ValueError:
-                    continue  # replication at this c exceeds memory
-                if best is None or choice.result.total < best[0].result.total:
-                    best = (choice, algo, p, c, g)
-        if best is None:
+                for variant in all_variants:
+                    if not variant.startswith(kind):
+                        continue
+                    if variant.startswith("2.5d") and \
+                            not predictor.fits_memory(ctx, algo, n, p, c):
+                        continue  # replication at this c exceeds memory
+                    cands.append((algo, variant, p, c, g))
+        if not cands:
             raise ValueError(f"no feasible grid for {device_count} devices")
-        choice, algo, p, c, g = best
-        res = choice.result
+        totals = np.empty(len(cands))
+        evals: Dict[Tuple[str, str], tuple] = {}
+        groups: Dict[Tuple[str, str], List[int]] = {}
+        for j, (algo, variant, p, c, g) in enumerate(cands):
+            groups.setdefault((algo, variant), []).append(j)
+        for (algo, variant), idx in groups.items():
+            ps = np.array([cands[j][2] for j in idx], dtype=float)
+            cs = np.array([cands[j][3] for j in idx], dtype=float)
+            if self.registry.has_program(algo, variant):
+                res = self.registry.evaluate_grid(ctx, algo, variant,
+                                                  float(n), ps, cs, 1.0)
+                evals[(algo, variant)] = (res, idx)
+                totals[idx] = res.total
+            else:  # legacy scalar ModelFn without a program
+                for j in idx:
+                    totals[j] = self.registry.evaluate(
+                        ctx, algo, variant, n, cands[j][2], c=cands[j][3]).total
+        j = int(np.argmin(totals))
+        algo, variant, p, c, g = cands[j]
+        ev = evals.get((algo, variant))
+        if ev is not None:
+            res = result_from_eval(self.registry.program(algo, variant),
+                                   ev[0], n, p, c, 1, idx=ev[1].index(j))
+        else:
+            res = self.registry.evaluate(ctx, algo, variant, n, p, c=c)
         return ExecutionPlan(
             algo=algo, variant=res.variant, n=n, p=p, c=c, r=res.r, g=g,
             local_kernel=local_kernel, dtype=dtype, machine=machine,
             fingerprint=fp,
             predicted={"total": res.total, "comm": res.comm, "comp": res.comp,
-                       "pct_peak": choice.pct_peak})
+                       "pct_peak": predictor.pct_of_peak(ctx, res)})
 
     # -- LM-layer consultation ----------------------------------------------
     def _lm_calibration_table(self):

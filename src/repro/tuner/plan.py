@@ -27,9 +27,12 @@ import re
 import threading
 from typing import Dict, Optional
 
-#: bump when the plan schema or the model semantics change incompatibly —
-#: stale cache entries are ignored, not misread.
-PLAN_SCHEMA = 1
+from ..perf import MODEL_VERSION
+
+#: bump when the plan *schema* (the JSON field set) changes incompatibly —
+#: stale cache entries are ignored, not misread.  Schema 2 added the
+#: ``model_version`` field.
+PLAN_SCHEMA = 2
 
 
 def default_plan_dir() -> str:
@@ -72,13 +75,19 @@ class ExecutionPlan:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["schema"] = PLAN_SCHEMA
+        d["model_version"] = MODEL_VERSION
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ExecutionPlan":
+        """Raises ValueError on schema *or* model-version mismatch: a plan
+        picked by older model equations must be re-planned, not silently
+        served (callers treat the ValueError as a cache miss)."""
         d = dict(d)
         if d.pop("schema", None) != PLAN_SCHEMA:
             raise ValueError("plan schema mismatch")
+        if d.pop("model_version", None) != MODEL_VERSION:
+            raise ValueError("plan model-version mismatch")
         return cls(**d)
 
 

@@ -7,8 +7,10 @@ calibration surfaces were assembled ad hoc at every call site
 (``AlgoContext(CommModel(HOPPER, ...), ComputeModel(HOPPER, ...))``).  The
 ``PerfModelRegistry`` unifies them:
 
-* **algorithm models** — ``(algo, variant) -> ModelFn`` with registration,
-  enumeration, and ``evaluate``;
+* **algorithm models** — ``(algo, variant) -> Program`` (cost-IR, see
+  ``repro.perf``) with registration, enumeration, scalar ``evaluate`` and
+  vectorized ``evaluate_grid``; plain scalar ``ModelFn`` registration is
+  kept as a legacy path;
 * **collective models** — name -> analytic collective, so consumers (the
   tuner benchmark, the LM-step models) can enumerate and cross-check them;
 * **machine surfaces** — machine constants + routine-efficiency curves +
@@ -32,6 +34,8 @@ from ..core.machine import CPU_HOST, HOPPER, MACHINES, TPU_V5E, Machine
 from ..core.perfmodel import (Calibration, CommModel, ComputeModel,
                               EfficiencyCurve, HOPPER_EFFICIENCY,
                               ParametricCalibration, TPU_EFFICIENCY)
+from ..perf import EvalOptions, EvalResult, Program, evaluate_program
+from ..perf.models import PROGRAMS
 
 
 @dataclasses.dataclass
@@ -56,16 +60,31 @@ class PerfModelRegistry:
 
     def __init__(self):
         self._algo_models: Dict[Tuple[str, str], alg.ModelFn] = {}
+        self._programs: Dict[Tuple[str, str], Program] = {}
         self._collectives: Dict[str, Callable] = {}
         self._machines: Dict[str, MachineSurface] = {}
 
     # -- registration --------------------------------------------------------
     def register_algorithm(self, algo: str, variant: str, fn: alg.ModelFn,
                            *, overwrite: bool = False) -> None:
+        """Register a plain scalar ModelFn (legacy path: no vectorized
+        evaluation; batch consumers fall back to per-scenario calls).
+        Prefer :meth:`register_program`."""
         key = (algo, variant)
         if key in self._algo_models and not overwrite:
             raise ValueError(f"model for {key} already registered")
         self._algo_models[key] = fn
+
+    def register_program(self, program: Program,
+                         *, overwrite: bool = False) -> None:
+        """Register a cost-IR :class:`~repro.perf.Program`: the model gains
+        vectorized grid evaluation and a scalar shim in one step."""
+        key = program.key
+        if (key in self._algo_models or key in self._programs) \
+                and not overwrite:
+            raise ValueError(f"model for {key} already registered")
+        self._programs[key] = program
+        self._algo_models[key] = alg.scalar_shim(program)
 
     def register_collective(self, name: str, fn: Callable,
                             *, overwrite: bool = False) -> None:
@@ -100,6 +119,16 @@ class PerfModelRegistry:
             raise KeyError(f"no model for ({algo!r}, {variant!r}); "
                            f"registered: {sorted(self._algo_models)}") from None
 
+    def has_program(self, algo: str, variant: str) -> bool:
+        return (algo, variant) in self._programs
+
+    def program(self, algo: str, variant: str) -> Program:
+        try:
+            return self._programs[(algo, variant)]
+        except KeyError:
+            raise KeyError(f"no cost-IR program for ({algo!r}, {variant!r}); "
+                           f"registered: {sorted(self._programs)}") from None
+
     def collective(self, name: str) -> Callable:
         return self._collectives[name]
 
@@ -122,14 +151,26 @@ class PerfModelRegistry:
 
     # -- evaluation ----------------------------------------------------------
     def evaluate(self, ctx: alg.AlgoContext, algo: str, variant: str,
-                 n: int, p: int, c: int = 1, r: int = 1) -> alg.ModelResult:
-        return self.model(algo, variant)(ctx, n, p, c=c, r=r)
+                 n: int, p: int, c: int = 1, r: int = 1,
+                 options: Optional[EvalOptions] = None) -> alg.ModelResult:
+        fn = self.model(algo, variant)
+        if options is not None:
+            return fn(ctx, n, p, c=c, r=r, options=options)
+        return fn(ctx, n, p, c=c, r=r)
+
+    def evaluate_grid(self, ctx: alg.AlgoContext, algo: str, variant: str,
+                      n, p, c=1, r=1,
+                      options: Optional[EvalOptions] = None) -> EvalResult:
+        """Vectorized evaluation over numpy arrays of scenarios — one pass
+        for a whole ``(n, p, c, r)`` grid (arrays broadcast)."""
+        return evaluate_program(self.program(algo, variant), ctx, n, p, c, r,
+                                options=options)
 
 
 def _default_registry() -> PerfModelRegistry:
     reg = PerfModelRegistry()
-    for (algo, variant), fn in alg.MODELS.items():
-        reg.register_algorithm(algo, variant, fn)
+    for program in PROGRAMS.values():
+        reg.register_program(program)
     for name in ("t_redsca_sync", "t_scatter_sync", "t_gather", "t_allgather",
                  "t_allgather_sync", "t_reduce", "t_bcast", "t_bcast_sync",
                  "t_inirepl", "t_ring_allgather", "t_ring_reducescatter",

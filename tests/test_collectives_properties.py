@@ -1,0 +1,126 @@
+"""Property tests for the collective schedules (paper §V).
+
+Two families of invariants, pinned over the whole parameter space
+(hypothesis where available; the conftest shim degrades to fixed samples):
+
+* **traffic conservation** — the recursive schedules move exactly the
+  volume the algorithm requires: each phase of ``reduce``/``bcast`` on a
+  ``w``-word vector over ``q = 2^k`` processes transfers ``w * (q-1)/q``
+  words in total across its steps (recursive halving and binomial
+  doubling are different orderings of the same traffic);
+* **monotonicity** — calibrated time never decreases in the vector length
+  ``w`` or the job size ``p`` (contention factors grow with ``p``).
+
+The step-level view comes from ``repro.perf.collective_schedule``; a glue
+test asserts it reproduces the legacy ``core.collectives`` closed forms
+exactly, so the properties hold for both implementations.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CommModel, HOPPER, ParametricCalibration
+from repro.core import collectives as coll
+from repro.perf import collective_schedule
+
+CM = CommModel(HOPPER, ParametricCalibration())
+
+#: schedule kind -> legacy closed form (signature (cm, p, q, w, d))
+LEGACY = {
+    "redsca_sync": coll.t_redsca_sync,
+    "scatter_sync": coll.t_scatter_sync,
+    "allgather_sync": coll.t_allgather_sync,
+    "reduce": coll.t_reduce,
+    "bcast": coll.t_bcast,
+    "bcast_sync": coll.t_bcast_sync,
+}
+
+
+def _time_of_steps(steps, p):
+    total = 0.0
+    for s in steps:
+        if s.sync:
+            total += CM.t_comm_sync(p, s.words, s.dist)
+        else:
+            total += CM.t_comm(s.words, s.dist)
+    return total
+
+
+class TestTrafficConservation:
+    @given(k=st.integers(1, 10), w_exp=st.integers(8, 24))
+    @settings(max_examples=60, deadline=None)
+    def test_reduce_phases_conserve_traffic(self, k, w_exp):
+        q, w = 2 ** k, float(2 ** w_exp)
+        steps = collective_schedule("reduce", q, w, d=1.0)
+        redsca = sum(s.words for s in steps if s.phase == "reduce_scatter")
+        gather = sum(s.words for s in steps if s.phase == "gather")
+        want = w * (q - 1) / q
+        assert redsca == pytest.approx(want, rel=1e-12)
+        assert gather == pytest.approx(want, rel=1e-12)
+
+    @given(k=st.integers(1, 10), w_exp=st.integers(8, 24))
+    @settings(max_examples=60, deadline=None)
+    def test_bcast_phases_conserve_traffic(self, k, w_exp):
+        q, w = 2 ** k, float(2 ** w_exp)
+        for kind in ("bcast", "bcast_sync"):
+            steps = collective_schedule(kind, q, w, d=1.0)
+            scatter = sum(s.words for s in steps if s.phase == "scatter")
+            allg = sum(s.words for s in steps if s.phase == "allgather")
+            want = w * (q - 1) / q
+            assert scatter == pytest.approx(want, rel=1e-12)
+            assert allg == pytest.approx(want, rel=1e-12)
+
+    @given(k=st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_exactly_one_sync_per_synchronized_phase(self, k):
+        q = 2 ** k
+        assert sum(s.sync for s in collective_schedule("reduce", q, 1e6)) == 1
+        assert sum(s.sync for s in collective_schedule("bcast", q, 1e6)) == 1
+        assert sum(s.sync for s in
+                   collective_schedule("bcast_sync", q, 1e6)) == 2
+
+    def test_degenerate_group_is_empty(self):
+        for kind in ("reduce", "bcast", "bcast_sync"):
+            assert collective_schedule(kind, 1, 1e6) == []
+
+
+class TestMonotonicity:
+    @given(k=st.integers(1, 8), d=st.sampled_from([1.0, 8.0, 64.0]))
+    @settings(max_examples=40, deadline=None)
+    def test_calibrated_time_monotone_in_w(self, k, d):
+        q = 2 ** k
+        p = 4096
+        for kind in ("reduce", "bcast"):
+            fn = LEGACY[kind]
+            prev = 0.0
+            for w_exp in (8, 12, 16, 20, 24):
+                t = fn(CM, p, q, float(2 ** w_exp), d)
+                assert t >= prev
+                prev = t
+
+    @given(k=st.integers(1, 8), w_exp=st.integers(8, 24))
+    @settings(max_examples=40, deadline=None)
+    def test_calibrated_time_monotone_in_p(self, k, w_exp):
+        q, w = 2 ** k, float(2 ** w_exp)
+        for kind in ("reduce", "bcast", "bcast_sync"):
+            fn = LEGACY[kind]
+            prev = 0.0
+            for p in (64, 256, 1024, 4096, 65536):
+                t = fn(CM, p, q, w, 4.0)
+                assert t >= prev, (kind, p)
+                prev = t
+
+
+class TestScheduleMatchesClosedForms:
+    @given(k=st.integers(1, 10), w_exp=st.integers(8, 24),
+           d=st.sampled_from([1.0, 4.0, 32.0]))
+    @settings(max_examples=60, deadline=None)
+    def test_step_sum_equals_legacy_time(self, k, w_exp, d):
+        """Summing the expanded steps under the calibrated CommModel equals
+        the legacy closed forms — the IR Collective node and
+        core.collectives cannot drift apart."""
+        q, w, p = 2 ** k, float(2 ** w_exp), 4096
+        for kind, fn in LEGACY.items():
+            steps = collective_schedule(kind, q, w, d)
+            assert _time_of_steps(steps, p) == pytest.approx(
+                fn(CM, p, q, w, d), rel=1e-12), kind
