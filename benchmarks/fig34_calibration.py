@@ -14,8 +14,9 @@ import json
 def main() -> dict:
     import jax
     from repro.core.calibration import (bench_contention, bench_ping,
-                                        fit_alpha_beta, hopper_like_simulator,
-                                        v5e_pod_simulator)
+                                        fit_alpha_beta)
+    from repro.sim import (hopper_like_topology, shift_factors,
+                           v5e_pod_topology)
     n = len(jax.devices())
     ping = bench_ping(sizes_words=(1 << 18, 1 << 21))
     L, beta = fit_alpha_beta(ping)
@@ -25,15 +26,14 @@ def main() -> dict:
     for d in (1, 2, n // 2):
         wall = bench_contention(n, d, words=words)
         measured[str(d)] = wall / ideal
-    sim_h = hopper_like_simulator()
-    sim_v = v5e_pod_simulator()
     sim = {}
-    for name, s, ps in (("hopper3d", sim_h, (64, 1024, 4096)),
-                        ("v5e2d", sim_v, (16, 64, 256))):
+    for name, topo, ps in (("hopper3d", hopper_like_topology(),
+                            (64, 1024, 4096)),
+                           ("v5e2d", v5e_pod_topology(), (16, 64, 256))):
         rows = {}
         for d in (1, 4, 16, 32):
             for p in ps:
-                cavg, cmax = s.factors(p, d)
+                cavg, cmax = shift_factors(topo, p, d)
                 rows[f"p{p}_d{d}"] = {"c_avg": cavg, "c_max": cmax}
         sim[name] = rows
     return {"measured_factor_vs_distance": measured,

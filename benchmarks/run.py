@@ -133,6 +133,18 @@ def bench_tuner():
          f"geomean_speedup={me['geomean_speedup']:.1f}x")
 
 
+def bench_sim():
+    t0 = time.perf_counter()
+    from benchmarks.bench_sim import main as sim
+    res = sim()
+    _save("BENCH_sim", res)
+    emit("sim_summa_16x16_torus", (time.perf_counter() - t0) * 1e6,
+         f"events={res['events']} "
+         f"events_per_sec={res['events_per_sec']:.0f} "
+         f"sim_over_nocal={res['sim_over_nocal']:.2f} "
+         f"max_rel_err_nocal={res['max_rel_err_nocal']:.1e}")
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -165,6 +177,7 @@ BENCHES = {
     "lm_model": bench_lm_model,
     "kernels": bench_kernels,
     "tuner": bench_tuner,
+    "sim": bench_sim,
 }
 
 

@@ -10,8 +10,8 @@ def main() -> dict:
     from repro.core import AlgoContext, CommModel, ComputeModel, TPU_V5E
     from repro.core.algorithms import ALGOS, USEFUL_FLOPS, VARIANTS
     from repro.core.calibration import (hopper_fitted_ctx,
-                                        joint_validation_report,
-                                        v5e_pod_simulator)
+                                        joint_validation_report)
+    from repro.sim import derive_calibration, v5e_pod_topology
     from repro.core.machine import HOPPER
     from repro.core.paper_data import (CLAIMED_CROSSOVER, CORE_COUNTS,
                                        PAPER_TABLES, table_best_variant)
@@ -55,8 +55,8 @@ def main() -> dict:
         out["claims"][f"crossover_{algo}_expected"] = CLAIMED_CROSSOVER[algo]
 
     # --- TPU v5e adaptation: same methodology, v5e machine + simulator ------
-    cal = v5e_pod_simulator().build_table(ps=[16, 64, 256],
-                                          distances=[1, 2, 4, 8, 16])
+    cal = derive_calibration(v5e_pod_topology(), ps=[16, 64, 256],
+                             distances=[1, 2, 4, 8, 16])
     tpu_ctx = AlgoContext(CommModel(TPU_V5E, cal),
                           ComputeModel(TPU_V5E, TPU_EFFICIENCY))
     for algo in ALGOS:

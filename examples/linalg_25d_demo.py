@@ -66,14 +66,16 @@ def main():
 
     # and the model's advice for real machines
     from repro.core import AlgoContext, CommModel, ComputeModel, TPU_V5E
-    from repro.core.calibration import hopper_fitted_ctx, v5e_pod_simulator
+    from repro.core.calibration import hopper_fitted_ctx
     from repro.core.perfmodel import TPU_EFFICIENCY
     from repro.core.predictor import select
+    from repro.sim import derive_calibration, v5e_pod_topology
     ctx_h = hopper_fitted_ctx()
     ch = select(ctx_h, "cholesky", 65536, 4096)
     print(f"\nHopper @24k cores, cholesky n=65536 -> "
           f"{ch.result.variant} (c={ch.result.c}, {ch.pct_peak:.1f}% peak)")
-    cal = v5e_pod_simulator().build_table(ps=[64, 256], distances=[1, 4, 16])
+    cal = derive_calibration(v5e_pod_topology(), ps=[64, 256],
+                             distances=[1, 4, 16])
     ctx_t = AlgoContext(CommModel(TPU_V5E, cal),
                         ComputeModel(TPU_V5E, TPU_EFFICIENCY))
     ch = select(ctx_t, "cholesky", 131072, 256)

@@ -17,12 +17,12 @@ real pod: TPU chips) — the benchmarks are the portable part of the
 methodology, the numbers are machine-specific.
 
 Because a single-process CPU run cannot observe *per-rank* completion times
-(everything is jitted SPMD), we also provide ``ContentionSimulator``: a
-dimension-ordered-routing link-load model of a torus that produces
-``C_avg``/``C_max`` surfaces from first principles.  It is used (a) to
-generate Fig. 3/4-analog tables deterministically for tests, and (b) as the
-planning surface for machines we cannot benchmark (the paper's own use-case
-of predicting larger systems).
+(everything is jitted SPMD), the repo derives deterministic
+``C_avg``/``C_max`` surfaces from a dimension-ordered-routing link-load
+model of a torus.  That model now lives in ``repro.sim`` (topologies, the
+link-contention network engine, and the full per-rank program simulator);
+``ContentionSimulator`` here is a deprecated shim over
+``repro.sim.derive_calibration`` kept for one release.
 
 ``fit_hopper_calibration`` recovers the paper's (unpublished) calibration
 surface by fitting ``ParametricCalibration`` to the paper's *published*
@@ -211,83 +211,65 @@ def bench_contention(n_procs: int, distance: int, words: int = 1 << 20,
 
 
 # ---------------------------------------------------------------------------
-# Torus link-load contention simulator (deterministic C surfaces)
+# Torus link-load contention simulator — MOVED to repro.sim (deprecated shims)
 # ---------------------------------------------------------------------------
+
+_MOVED_WARNED: set = set()
+
+
+def _warn_moved(name: str, replacement: str) -> None:
+    if name in _MOVED_WARNED:
+        return
+    _MOVED_WARNED.add(name)
+    import warnings
+    warnings.warn(
+        f"repro.core.calibration.{name} has moved to repro.sim; use "
+        f"{replacement} instead (this shim will be removed)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
 class ContentionSimulator:
-    """Dimension-ordered routing on a k-ary torus; the calibration factor of
-    a traffic pattern is the link-load statistic (max/avg messages sharing
-    the bottleneck link on each path).
+    """.. deprecated:: superseded by ``repro.sim``.
 
-    This reproduces the paper's empirical findings structurally:
-    * larger distance => longer paths => more shared links => larger C;
-    * C_max grows with p while C_avg saturates;
-    * factors are ~independent of message size (load is size-independent).
+    The DOR link-load model now lives in the full per-rank simulator:
+    ``repro.sim.Torus`` is the topology, ``repro.sim.shift_factors`` /
+    ``repro.sim.derive_calibration`` produce the (bit-identical) C
+    surfaces, and ``repro.sim.simulate_program`` replays whole cost-IR
+    programs on it.  This shim delegates and warns once.
     """
 
     torus: tuple[int, ...]
 
-    def _coords(self, rank: int) -> tuple[int, ...]:
-        c = []
-        for k in self.torus:
-            c.append(rank % k)
-            rank //= k
-        return tuple(c)
+    def __post_init__(self):
+        _warn_moved("ContentionSimulator",
+                    "repro.sim.Torus + shift_factors/derive_calibration")
 
-    def _route(self, src: int, dst: int):
-        """Yield directed links (node, dim, dir) along the DOR path."""
-        cs, cd = list(self._coords(src)), list(self._coords(dst))
-        cur = cs[:]
-        for dim, k in enumerate(self.torus):
-            while cur[dim] != cd[dim]:
-                fwd = (cd[dim] - cur[dim]) % k
-                step = 1 if fwd <= k - fwd else -1
-                yield (tuple(cur), dim, step)
-                cur[dim] = (cur[dim] + step) % k
+    @property
+    def _topology(self):
+        from ..sim import Torus
+        return Torus(self.torus)
 
     def factors(self, p: int, distance: int) -> tuple[float, float]:
         """(C_avg, C_max) when all p ranks send rank -> rank+distance."""
-        p = min(p, int(np.prod(self.torus)))
-        load: Dict[tuple, int] = {}
-        paths = []
-        for src in range(p):
-            dst = (src + distance) % p
-            path = list(self._route(src, dst))
-            paths.append(path)
-            for link in path:
-                load[link] = load.get(link, 0) + 1
-        per_rank = []
-        for path in paths:
-            if not path:
-                per_rank.append(1.0)
-            else:
-                # serialization on the most-contended link of the path
-                per_rank.append(float(max(load[l] for l in path)))
-        return float(np.mean(per_rank)), float(np.max(per_rank))
+        from ..sim import shift_factors
+        return shift_factors(self._topology, p, distance)
 
-    def build_table(self, ps: Sequence[int], distances: Sequence[int]) -> CalibrationTable:
-        avg: Dict[float, float] = {}
-        mx: Dict[tuple[float, float], float] = {}
-        for d in distances:
-            avgs = []
-            for p in ps:
-                a, m = self.factors(p, d)
-                mx[(float(p), float(d))] = m
-                avgs.append(a)
-            # the paper: C_avg does not significantly depend on p — average it
-            avg[float(d)] = float(np.mean(avgs))
-        return CalibrationTable(avg=avg, mx=mx)
+    def build_table(self, ps: Sequence[int],
+                    distances: Sequence[int]) -> CalibrationTable:
+        from ..sim import derive_calibration
+        return derive_calibration(self._topology, ps, distances)
 
 
 def hopper_like_simulator() -> ContentionSimulator:
-    """A Gemini-like 3D torus sized for 4096 processes (Hopper scale)."""
+    """.. deprecated:: use ``repro.sim.hopper_like_topology()``."""
+    _warn_moved("hopper_like_simulator", "repro.sim.hopper_like_topology")
     return ContentionSimulator(torus=(16, 16, 16))
 
 
 def v5e_pod_simulator() -> ContentionSimulator:
-    """A v5e pod: 16x16 2D ICI torus (256 chips)."""
+    """.. deprecated:: use ``repro.sim.v5e_pod_topology()``."""
+    _warn_moved("v5e_pod_simulator", "repro.sim.v5e_pod_topology")
     return ContentionSimulator(torus=(16, 16))
 
 

@@ -31,7 +31,7 @@ import math
 from typing import Dict, Optional
 
 from ..configs.base import ModelConfig, ShapeConfig
-from .calibration import v5e_pod_simulator
+from ..sim import derive_calibration, v5e_pod_topology
 from .collectives import t_all_to_all, t_ring_allgather, t_ring_allreduce, \
     t_ring_reducescatter
 from .machine import TPU_V5E, Machine
@@ -77,8 +77,8 @@ def predict_train_step(cfg: ModelConfig, shape: ShapeConfig,
                        calibration: Optional[Calibration] = None,
                        *, fsdp: bool = False,
                        int8_pod_reduce: bool = False) -> LMStepEstimate:
-    cal = calibration or v5e_pod_simulator().build_table(
-        ps=[16, 64, 256], distances=[1, 2, 4, 8])
+    cal = calibration or derive_calibration(
+        v5e_pod_topology(), ps=[16, 64, 256], distances=[1, 2, 4, 8])
     cm = CommModel(machine, cal)
     comp = ComputeModel(machine, TPU_EFFICIENCY)
 

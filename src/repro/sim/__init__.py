@@ -1,0 +1,46 @@
+"""repro.sim — per-rank discrete-event simulation of cost-IR programs on
+explicit network topologies.
+
+The closed-form evaluator (``repro.perf.evaluate``) collapses network
+contention into one calibrated scalar per phase; this package replays the
+*same* IR programs rank-by-rank on a link-level topology model, so
+contention emerges from where traffic actually collides:
+
+  topology.py   Torus (k-ary n-cube, dimension-ordered routing) and the
+                contention-free Crossbar baseline; ``topology_for`` sizes
+                a torus for a machine
+  network.py    the fluid max-rate link engine: a transfer's rate is
+                1 / (beta * max instantaneous load over its links)
+  executor.py   ``simulate_program``: walks an IR program per rank —
+                collectives expand step-by-step, Overlap branches race,
+                Loop/ramp forms unroll
+  result.py     ``SimResult`` (per-rank phases, critical path, link
+                utilization, overlap efficiency) + Chrome-trace emission
+                under ``artifacts/traces/``
+  calibrate.py  ``derive_calibration``: C_avg / C_max tables from
+                simulated link loads (subsumes the legacy
+                ``core.calibration.ContentionSimulator``)
+
+On a contention-free topology the simulated makespan equals the
+closed-form ``est_NoCal`` estimate to float round-off (gated in CI); on a
+torus it adds what the calibration factors only approximate — *where* the
+contention happens and which rank carries the critical path.  The tuner
+uses it as an opt-in second planning stage: ``Tuner.plan(...,
+refine="sim")`` re-ranks the closed-form shortlist by simulated time.
+"""
+
+from .topology import Crossbar, Topology, Torus, topology_for
+from .network import LinkStats, Network, Transfer
+from .executor import MAX_UNROLL, ProgramSimulator, simulate_program
+from .result import RankPhase, SimResult, traces_dir
+from .calibrate import (derive_calibration, hopper_like_topology,
+                        shift_factors, v5e_pod_topology)
+
+__all__ = [
+    "Crossbar", "Topology", "Torus", "topology_for",
+    "LinkStats", "Network", "Transfer",
+    "MAX_UNROLL", "ProgramSimulator", "simulate_program",
+    "RankPhase", "SimResult", "traces_dir",
+    "derive_calibration", "hopper_like_topology", "shift_factors",
+    "v5e_pod_topology",
+]

@@ -1,0 +1,149 @@
+"""Explicit network topologies for the per-rank simulator.
+
+A :class:`Topology` maps an ordered pair of node indices to the sequence of
+*directed links* a message traverses.  Two concrete topologies:
+
+* :class:`Torus` — a k-ary n-cube with dimension-ordered routing (DOR),
+  the shape of the paper's Gemini 3D torus and of TPU ICI meshes.  Routing
+  is identical to the legacy ``core.calibration.ContentionSimulator``
+  (shortest wraparound direction per dimension, ties broken forward), so
+  calibration tables derived through this layer reproduce the old numbers
+  bit-for-bit.
+* :class:`Crossbar` — a flat, fully-connected baseline where every ordered
+  pair owns a dedicated channel.  No two distinct messages ever share a
+  link, so simulation on a crossbar is *contention-free by construction*
+  — the cross-validation anchor against the closed-form ``est_NoCal``
+  evaluator.
+
+Link ids are small integers local to a topology instance; ``link_name``
+renders them for traces and utilization reports.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+
+class Topology:
+    """Interface: node count plus directed-link routing."""
+
+    n_nodes: int
+
+    def route(self, src: int, dst: int) -> Tuple[int, ...]:
+        """Directed link ids traversed by a ``src -> dst`` message (empty
+        for ``src == dst``)."""
+        raise NotImplementedError
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route(src, dst))
+
+    def link_name(self, link: int) -> str:
+        raise NotImplementedError
+
+
+class Torus(Topology):
+    """k-ary n-cube with dimension-ordered routing.
+
+    Nodes are numbered in mixed radix over ``shape`` (dimension 0 fastest,
+    matching the legacy contention simulator).  Each node owns ``2 * ndim``
+    outgoing links (one per dimension per direction).
+    """
+
+    def __init__(self, shape: Sequence[int]):
+        self.shape = tuple(int(k) for k in shape)
+        if not self.shape or any(k < 1 for k in self.shape):
+            raise ValueError(f"invalid torus shape {shape!r}")
+        self.ndim = len(self.shape)
+        n = 1
+        for k in self.shape:
+            n *= k
+        self.n_nodes = n
+        self._cache: Dict[Tuple[int, int], Tuple[int, ...]] = {}
+
+    def coords(self, node: int) -> Tuple[int, ...]:
+        c = []
+        for k in self.shape:
+            c.append(node % k)
+            node //= k
+        return tuple(c)
+
+    def node(self, coords: Sequence[int]) -> int:
+        idx, stride = 0, 1
+        for x, k in zip(coords, self.shape):
+            idx += (int(x) % k) * stride
+            stride *= k
+        return idx
+
+    def _link_id(self, coords: Sequence[int], dim: int, step: int) -> int:
+        return (self.node(coords) * self.ndim + dim) * 2 + (0 if step > 0 else 1)
+
+    def route(self, src: int, dst: int) -> Tuple[int, ...]:
+        key = (src, dst)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        cs, cd = list(self.coords(src)), list(self.coords(dst))
+        links: List[int] = []
+        for dim, k in enumerate(self.shape):
+            while cs[dim] != cd[dim]:
+                fwd = (cd[dim] - cs[dim]) % k
+                step = 1 if fwd <= k - fwd else -1  # tie -> forward (legacy)
+                links.append(self._link_id(cs, dim, step))
+                cs[dim] = (cs[dim] + step) % k
+        path = tuple(links)
+        self._cache[key] = path
+        return path
+
+    def link_name(self, link: int) -> str:
+        node, rest = divmod(link, self.ndim * 2)
+        dim, sign = divmod(rest, 2)
+        return f"{self.coords(node)}.d{dim}{'+' if sign == 0 else '-'}"
+
+    def __repr__(self):
+        return f"Torus{self.shape}"
+
+
+class Crossbar(Topology):
+    """Fully-connected baseline: a dedicated channel per ordered pair.
+
+    Channel ids are assigned lazily on first route so a large crossbar does
+    not materialize ``n^2`` links up front.
+    """
+
+    def __init__(self, n_nodes: int):
+        if n_nodes < 1:
+            raise ValueError(f"need >= 1 node, got {n_nodes}")
+        self.n_nodes = int(n_nodes)
+        self._ids: Dict[Tuple[int, int], int] = {}
+        self._names: List[Tuple[int, int]] = []
+
+    def route(self, src: int, dst: int) -> Tuple[int, ...]:
+        if src == dst:
+            return ()
+        key = (src, dst)
+        link = self._ids.get(key)
+        if link is None:
+            link = len(self._names)
+            self._ids[key] = link
+            self._names.append(key)
+        return (link,)
+
+    def link_name(self, link: int) -> str:
+        src, dst = self._names[link]
+        return f"{src}->{dst}"
+
+    def __repr__(self):
+        return f"Crossbar({self.n_nodes})"
+
+
+def topology_for(machine, p: int) -> Topology:
+    """The smallest balanced torus of ``machine.torus_dims`` dimensions
+    holding ``p`` ranks (the tuner's default when refining plans by
+    simulation).  Machines without a torus get a crossbar."""
+    dims = int(getattr(machine, "torus_dims", 0) or 0)
+    if dims < 1:
+        return Crossbar(max(1, p))
+    k = 1
+    while k ** dims < p:
+        k += 1
+    return Torus((k,) * dims)

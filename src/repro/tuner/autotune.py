@@ -14,6 +14,12 @@ on this device pool?" by
    the plan cache, so the next call with the same (machine fingerprint,
    op, n, p, dtype) never touches the models again.
 
+``plan(..., refine="sim")`` inserts an opt-in second stage between 2 and
+3: the closed-form evaluator shortlists the top-k grids, then the
+per-rank discrete-event simulator (``repro.sim``) replays each candidate
+on the machine's topology and the argmin is taken over *simulated*
+makespans (DESIGN.md §4.4).
+
 The same Tuner also serves the LM layers: ``recommend_fsdp`` consults the
 LM-step model for the parameter-sharding layout choice, and
 ``prefill_chunk`` sizes the serving engine's chunked prefill.
@@ -92,14 +98,26 @@ class Tuner:
              dtype: str = "float32",
              machine: Optional[str] = None,
              local_kernel: Optional[str] = None,
-             use_cache: bool = True) -> ExecutionPlan:
+             use_cache: bool = True,
+             refine: Optional[str] = None,
+             shortlist: int = 4) -> ExecutionPlan:
         """Resolve (or recall) the best execution plan for ``op`` at size
         ``n`` on the given device pool.
 
         Pass real ``devices`` for dispatch, or ``device_count``/``platform``
         alone to ask hypothetical questions ("what would 4096 Hopper
         processes run?") without touching jax device state.
+
+        ``refine="sim"`` adds the opt-in second planning stage: the
+        vectorized closed-form evaluator shortlists the ``shortlist`` best
+        grids, then the per-rank discrete-event simulator (``repro.sim``)
+        replays each on the machine's topology and the plan is re-ranked
+        by *simulated* time (``predicted["sim_total"]``).  Refined plans
+        cache under their own key, so closed-form plans are never
+        shadowed.
         """
+        if refine not in (None, "sim"):
+            raise ValueError(f"refine must be None or 'sim', got {refine!r}")
         if devices is not None:
             devices = list(devices)
             device_count = len(devices)
@@ -122,7 +140,11 @@ class Tuner:
         local_kernel = local_kernel or ("pallas" if platform == "tpu" else "jnp")
 
         fp = machine_fingerprint(machine, platform, device_kind, device_count)
-        key = plan_key(fp, op, n, device_count, dtype)
+        # refine and shortlist both shape the refined decision, so they are
+        # part of the cache identity (closed-form plans keep their old keys)
+        key = plan_key(fp, op if refine is None
+                       else f"{op}@{refine}{int(shortlist)}",
+                       n, device_count, dtype)
         if use_cache:
             hit = self.cache.get(key)
             if hit is not None:
@@ -142,7 +164,8 @@ class Tuner:
                     return plan
 
         plan = self._build_plan(op, n, device_count, machine, dtype,
-                                local_kernel, fp)
+                                local_kernel, fp, refine=refine,
+                                shortlist=shortlist)
         with self._lock:
             self.stats["model_evals"] += 1
         if use_cache:
@@ -150,7 +173,9 @@ class Tuner:
         return plan
 
     def _build_plan(self, op: str, n: int, device_count: int, machine: str,
-                    dtype: str, local_kernel: str, fp: str) -> ExecutionPlan:
+                    dtype: str, local_kernel: str, fp: str,
+                    refine: Optional[str] = None,
+                    shortlist: int = 4) -> ExecutionPlan:
         try:
             algos = OP_ALGOS[op]
         except KeyError:
@@ -192,7 +217,12 @@ class Tuner:
                 for j in idx:
                     totals[j] = self.registry.evaluate(
                         ctx, algo, variant, n, cands[j][2], c=cands[j][3]).total
-        j = int(np.argmin(totals))
+        sim_extra: Optional[Dict[str, float]] = None
+        if refine == "sim":
+            j, sim_extra = self._sim_rerank(cands, totals, machine, n,
+                                            shortlist)
+        else:
+            j = int(np.argmin(totals))
         algo, variant, p, c, g = cands[j]
         ev = evals.get((algo, variant))
         if ev is not None:
@@ -200,12 +230,43 @@ class Tuner:
                                    ev[0], n, p, c, 1, idx=ev[1].index(j))
         else:
             res = self.registry.evaluate(ctx, algo, variant, n, p, c=c)
+        predicted = {"total": res.total, "comm": res.comm, "comp": res.comp,
+                     "pct_peak": predictor.pct_of_peak(ctx, res)}
+        if sim_extra is not None:
+            predicted.update(sim_extra)
         return ExecutionPlan(
             algo=algo, variant=res.variant, n=n, p=p, c=c, r=res.r, g=g,
             local_kernel=local_kernel, dtype=dtype, machine=machine,
-            fingerprint=fp,
-            predicted={"total": res.total, "comm": res.comm, "comp": res.comp,
-                       "pct_peak": predictor.pct_of_peak(ctx, res)})
+            fingerprint=fp, predicted=predicted)
+
+    def _sim_rerank(self, cands, totals, machine: str, n: int,
+                    shortlist: int) -> Tuple[int, Dict[str, float]]:
+        """The opt-in second planning stage: replay the closed-form top-k
+        candidates through the per-rank discrete-event simulator on the
+        machine's topology and pick the one with the smallest *simulated*
+        makespan.  Returns (winning candidate index, predicted-dict
+        extras)."""
+        from ..sim import simulate_program, topology_for
+        surface = self.registry.machine(machine)
+        ctx = surface.context()
+        order = np.argsort(totals)[:max(1, int(shortlist))]
+        best_j, best_t = int(order[0]), float("inf")
+        extras: Dict[str, float] = {}
+        for j in order:
+            algo, variant, p, c, _g = cands[int(j)]
+            if not self.registry.has_program(algo, variant):
+                continue  # legacy scalar models cannot be simulated
+            sim = simulate_program(self.registry.program(algo, variant), ctx,
+                                   topology_for(surface.machine, p),
+                                   float(n), p, c, 1)
+            extras[f"sim/{algo}/{variant}@p{p}c{c}"] = float(sim.total)
+            with self._lock:
+                self.stats["sim_evals"] = self.stats.get("sim_evals", 0) + 1
+            if sim.total < best_t:
+                best_j, best_t = int(j), float(sim.total)
+        if np.isfinite(best_t):
+            extras["sim_total"] = best_t
+        return best_j, extras
 
     # -- LM-layer consultation ----------------------------------------------
     def _lm_calibration_table(self):
@@ -214,9 +275,9 @@ class Tuner:
         if cal is None:
             # build outside the lock: the simulator run is slow and the lock
             # also serializes every plan() stats update
-            from ..core.calibration import v5e_pod_simulator
-            cal = v5e_pod_simulator().build_table(
-                ps=[16, 64, 256], distances=[1, 2, 4, 8])
+            from ..sim import derive_calibration, v5e_pod_topology
+            cal = derive_calibration(v5e_pod_topology(),
+                                     ps=[16, 64, 256], distances=[1, 2, 4, 8])
             with self._lock:
                 if self._lm_cal is None:
                     self._lm_cal = cal

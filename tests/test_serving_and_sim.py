@@ -7,8 +7,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import SHAPES, get
-from repro.core.calibration import ContentionSimulator, v5e_pod_simulator
 from repro.core.lm_model import predict_train_step, sharding_tradeoff_table
+from repro.sim import (Torus, derive_calibration, shift_factors,
+                       v5e_pod_topology)
 from repro.models import build_model
 from repro.serving import Engine, ServeConfig
 
@@ -84,36 +85,33 @@ class TestEngine:
         assert eng._prefill_chunk(16) == 1
 
 
-class TestContentionSimulator:
+class TestContentionFactors:
     def test_distance_zero_is_free(self):
-        sim = ContentionSimulator(torus=(8, 8))
-        cavg, cmax = sim.factors(64, 0)
+        cavg, cmax = shift_factors(Torus((8, 8)), 64, 0)
         assert cavg == 1.0 and cmax == 1.0
 
     def test_uniform_shift_on_ring(self):
         """On a 1D ring, shift-by-1 gives every link load 1 -> factor 1."""
-        sim = ContentionSimulator(torus=(16,))
-        cavg, cmax = sim.factors(16, 1)
+        cavg, cmax = shift_factors(Torus((16,)), 16, 1)
         assert cavg == pytest.approx(1.0)
         assert cmax == pytest.approx(1.0)
 
     @given(d=st.integers(1, 32))
     @settings(max_examples=20, deadline=None)
     def test_factors_at_least_one(self, d):
-        sim = ContentionSimulator(torus=(8, 8))
-        cavg, cmax = sim.factors(64, d)
+        cavg, cmax = shift_factors(Torus((8, 8)), 64, d)
         assert cmax >= cavg >= 1.0
 
     def test_longer_distance_more_contention(self):
         """Matches the paper's Fig. 4 trend on a 2D torus."""
-        sim = v5e_pod_simulator()
-        c1 = sim.factors(256, 1)[1]
-        c32 = sim.factors(256, 32)[1]
+        topo = v5e_pod_topology()
+        c1 = shift_factors(topo, 256, 1)[1]
+        c32 = shift_factors(topo, 256, 32)[1]
         assert c32 >= c1
 
     def test_build_table_roundtrip(self):
-        sim = v5e_pod_simulator()
-        tab = sim.build_table(ps=[16, 64, 256], distances=[1, 4, 16])
+        tab = derive_calibration(v5e_pod_topology(), ps=[16, 64, 256],
+                                 distances=[1, 4, 16])
         assert tab.c_avg(4) >= 1.0
         assert tab.c_max(256, 16) >= tab.c_avg(16) - 1e-9
         assert tab.c_max(1024, 4) >= 1.0   # extrapolated

@@ -1,0 +1,331 @@
+"""repro.sim: topology properties, the link-contention network engine,
+cross-validation against the closed-form evaluator, calibration
+derivation (incl. the deprecated core.calibration shims) and the tuner's
+sim-refined planning stage."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.perf import EvalOptions, PROGRAMS, evaluate_program
+from repro.sim import (Crossbar, Network, Torus, Transfer, derive_calibration,
+                       shift_factors, simulate_program, topology_for,
+                       v5e_pod_topology)
+from repro.tuner import DEFAULT_REGISTRY, Tuner
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return DEFAULT_REGISTRY.context("hopper-cray-xe6")
+
+
+def _shift_transfers(p, d, w, starts=0.0):
+    starts = np.broadcast_to(np.asarray(starts, dtype=float), (p,))
+    return [Transfer(r, (r + d) % p, w, float(starts[r])) for r in range(p)]
+
+
+# ---------------------------------------------------------------------------
+# Topology layer
+# ---------------------------------------------------------------------------
+
+
+class TestTopology:
+    @given(src=st.integers(0, 127), dst=st.integers(0, 127))
+    @settings(max_examples=40, deadline=None)
+    def test_torus_dor_hops_equal_wraparound_manhattan(self, src, dst):
+        topo = Torus((4, 8, 4))
+        expect = sum(min((b - a) % k, (a - b) % k)
+                     for a, b, k in zip(topo.coords(src), topo.coords(dst),
+                                        topo.shape))
+        assert topo.hops(src, dst) == expect
+
+    def test_torus_route_is_cached_and_self_empty(self):
+        topo = Torus((8, 8))
+        assert topo.route(5, 5) == ()
+        assert topo.route(0, 9) is topo.route(0, 9)
+        assert len(topo.route(0, 9)) == 2  # one hop per dimension
+
+    def test_crossbar_dedicated_channels(self):
+        xb = Crossbar(8)
+        seen = set()
+        for s in range(8):
+            for t in range(8):
+                if s == t:
+                    assert xb.route(s, t) == ()
+                    continue
+                (link,) = xb.route(s, t)
+                assert link not in seen
+                seen.add(link)
+        assert xb.link_name(next(iter(xb.route(0, 1)))) == "0->1"
+
+    def test_topology_for_machine(self):
+        from repro.core.machine import CPU_HOST, HOPPER, TPU_V5E
+        assert topology_for(TPU_V5E, 256).shape == (16, 16)
+        assert topology_for(HOPPER, 4096).shape == (16, 16, 16)
+        assert topology_for(CPU_HOST, 8).shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# Network engine
+# ---------------------------------------------------------------------------
+
+
+class TestNetwork:
+    def test_uncontended_transfer_is_ideal(self):
+        net = Network(Crossbar(4), latency=2e-6, beta=1e-9)
+        done = net.deliver([Transfer(0, 1, 1e6, 0.5, latency=2e-6)])
+        assert done[0] == pytest.approx(0.5 + 2e-6 + 1e-3, rel=1e-12)
+
+    @given(d=st.integers(1, 31))
+    @settings(max_examples=20, deadline=None)
+    def test_shift_traffic_conservation(self, d):
+        """Every message deposits its words on every link of its DOR path:
+        total link words == w * sum of hop counts."""
+        topo = Torus((4, 8))
+        p, w = 32, 1000.0
+        net = Network(topo, latency=0.0, beta=1e-9)
+        net.deliver(_shift_transfers(p, d, w))
+        expect = w * sum(topo.hops(r, (r + d) % p) for r in range(p))
+        assert sum(net.stats.words.values()) == pytest.approx(expect, rel=1e-9)
+
+    @given(d=st.integers(0, 31), w=st.floats(1.0, 1e7))
+    @settings(max_examples=20, deadline=None)
+    def test_shift_time_monotone_in_message_size(self, d, w):
+        def makespan(words):
+            net = Network(Torus((4, 8)), latency=1e-6, beta=1e-9)
+            return float(net.deliver(_shift_transfers(32, d, words)).max())
+
+        assert makespan(2.0 * w) >= makespan(w) - 1e-15
+
+    @given(d=st.integers(1, 15), k=st.integers(1, 31))
+    @settings(max_examples=20, deadline=None)
+    def test_shift_time_monotone_in_torus_load(self, d, k):
+        """Adding senders to the pattern never speeds anyone up."""
+        topo = Torus((4, 8))
+        p, w = 32, 1e6
+
+        def makespan(n_senders):
+            net = Network(topo, latency=0.0, beta=1e-9)
+            done = net.deliver([Transfer(r, (r + d) % p, w, 0.0)
+                                for r in range(n_senders)])
+            return float(done.max())
+
+        assert makespan(k + 1) >= makespan(k) - 1e-12
+
+    def test_contended_link_serializes(self):
+        """Two same-link transfers at half rate each: both finish at 2x the
+        solo time (fluid max-rate sharing)."""
+        topo = Torus((4,))
+        net = Network(topo, latency=0.0, beta=1e-9)
+        done = net.deliver([Transfer(0, 1, 1e6, 0.0),
+                            Transfer(0, 1, 1e6, 0.0)])
+        assert done == pytest.approx([2e-3, 2e-3], rel=1e-9)
+
+    def test_rate_recovers_when_competitor_drains(self):
+        """A short and a long transfer share a link: the long one runs at
+        half rate only while the short one is alive."""
+        net = Network(Torus((4,)), latency=0.0, beta=1e-9)
+        done = net.deliver([Transfer(0, 1, 1e6, 0.0),
+                            Transfer(0, 1, 3e6, 0.0)])
+        # short: 2e-3 (half rate); long: 1e6 words by 2e-3, then full rate
+        assert done[0] == pytest.approx(2e-3, rel=1e-9)
+        assert done[1] == pytest.approx(2e-3 + 2e-3, rel=1e-9)
+        assert max(net.stats.peak_load.values()) == 2
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation: contention-free simulation == est_NoCal closed form
+# ---------------------------------------------------------------------------
+
+
+class TestClosedFormCrossValidation:
+    @pytest.mark.parametrize("algo,variant", sorted(PROGRAMS))
+    def test_crossbar_matches_est_nocal(self, ctx, algo, variant):
+        """On a contention-free topology every transfer takes its ideal
+        alpha-beta time, so the per-rank simulation must reproduce the
+        closed-form est_NoCal total to 1e-6 relative (it lands at float
+        round-off) for all 16 paper programs — and LU."""
+        program = PROGRAMS[(algo, variant)]
+        c = 2 if program.uses_c else 1
+        r = 2 if program.uses_r else 1
+        est = float(evaluate_program(program, ctx, 8192.0, 16, c, r,
+                                     options=EvalOptions(mode="nocal")).total)
+        sim = simulate_program(program, ctx, Crossbar(16), 8192.0, 16, c, r)
+        assert sim.total == pytest.approx(est, rel=1e-6)
+        # contention-free => all ranks in lockstep
+        assert np.ptp(sim.per_rank) <= 1e-9 * sim.total
+
+    def test_collision_free_torus_also_matches(self, ctx):
+        """p small enough that DOR links never collide: Cannon's shift
+        patterns (d=1 and d=2) on a 2x2 torus use four disjoint links each,
+        so even a torus agrees with the closed form."""
+        program = PROGRAMS[("cannon", "2d")]
+        est = float(evaluate_program(program, ctx, 4096.0, 4,
+                                     options=EvalOptions(mode="nocal")).total)
+        sim = simulate_program(program, ctx, Torus((2, 2)), 4096.0, 4)
+        assert sim.total == pytest.approx(est, rel=1e-6)
+
+    @pytest.mark.parametrize("algo,variant", sorted(PROGRAMS))
+    def test_all_programs_simulate_on_16x16_torus(self, ctx, algo, variant):
+        """Every registered program runs end-to-end at pod scale (256 ranks
+        on a 16x16 torus) and contention only ever adds time over the
+        contention-free closed form."""
+        program = PROGRAMS[(algo, variant)]
+        c = 4 if program.uses_c else 1
+        r = 2 if program.uses_r else 1
+        res = simulate_program(program, ctx, Torus((16, 16)), 65536.0, 256,
+                               c, r)
+        est = float(evaluate_program(program, ctx, 65536.0, 256, c, r,
+                                     options=EvalOptions(mode="nocal")).total)
+        assert np.isfinite(res.total) and res.total >= est - 1e-9 * est
+        assert res.events > 0 and len(res.link_stats.words) > 0
+
+    def test_torus_contention_only_slows(self, ctx):
+        for key in (("summa", "2d"), ("cannon", "2.5d_ovlp")):
+            program = PROGRAMS[key]
+            c = 2 if program.uses_c else 1
+            xb = simulate_program(program, ctx, Crossbar(16), 8192.0, 16, c)
+            to = simulate_program(program, ctx, Torus((4, 4)), 8192.0, 16, c)
+            assert to.total >= xb.total - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# SimResult structure + Chrome trace
+# ---------------------------------------------------------------------------
+
+
+class TestSimResult:
+    def test_structure_and_critical_path(self, ctx):
+        program = PROGRAMS[("summa", "2d_ovlp")]
+        res = simulate_program(program, ctx, Torus((4, 4)), 8192.0, 16)
+        assert res.per_rank.shape == (16,)
+        assert res.total == pytest.approx(float(res.per_rank.max()))
+        assert set(res.phases) == {"first_bcasts", "final_dgemm", "loop"}
+        for ph in res.phases.values():
+            assert ph.exposed.shape == (16,)
+            assert (ph.exposed >= 0).all()
+        names = [name for name, _dur in res.critical_path]
+        assert names == list(res.phases)
+        cr = res.critical_rank
+        assert sum(d for _n, d in res.critical_path) == pytest.approx(
+            float(res.per_rank[cr]))
+        assert 0.0 <= res.overlap_efficiency <= 1.0
+        assert res.events > 0
+
+    def test_overlap_hides_comm(self, ctx):
+        """The overlapped variant's exposed time is below its serialized
+        ledgers and the efficiency metric reflects the hiding."""
+        res = simulate_program(PROGRAMS[("cannon", "2d_ovlp")], ctx,
+                               Crossbar(16), 32768.0, 16)
+        assert res.total < float((res.comm + res.comp).max()) - 1e-12
+        assert res.overlap_efficiency > 0.5
+
+    def test_chrome_trace_dump(self, ctx, tmp_path):
+        res = simulate_program(PROGRAMS[("cannon", "2d")], ctx,
+                               Torus((4, 4)), 4096.0, 16)
+        path = res.dump_chrome_trace(str(tmp_path / "t.json"))
+        with open(path) as f:
+            trace = json.load(f)
+        events = trace["traceEvents"]
+        assert any(e.get("ph") == "X" for e in events)
+        tids = {e["tid"] for e in events if e.get("ph") == "X"}
+        assert tids == set(range(16))
+        phase_names = {e["name"] for e in events if e.get("ph") == "X"}
+        assert phase_names == set(res.phases)
+        assert trace["otherData"]["total_s"] == pytest.approx(res.total)
+
+    def test_loop_fast_forward_preserves_link_traffic(self, ctx):
+        """Steady-state loop fast-forwarding must amplify the skipped
+        iterations' link stats and events, not drop them: an 8-iteration
+        shift loop deposits exactly 8x one iteration's words*hops."""
+        from repro.perf import Loop, P2P, Program, Seq
+        prog = Program("toy", "loop",
+                       Seq(("shifts", Loop(P2P(1000.0, 2), 8.0))))
+        res = simulate_program(prog, ctx, Torus((4, 4)), 1024.0, 16)
+        topo = Torus((4, 4))
+        per_iter = 1000.0 * sum(topo.hops(r, (r + 2) % 16) for r in range(16))
+        assert sum(res.link_stats.words.values()) == pytest.approx(
+            8 * per_iter, rel=1e-9)
+
+    def test_link_utilization_histogram(self, ctx):
+        res = simulate_program(PROGRAMS[("summa", "2d")], ctx,
+                               Torus((4, 4)), 8192.0, 16)
+        hist = res.utilization_histogram()
+        assert sum(hist["counts"]) == len(res.link_stats.busy)
+        assert sum(hist["counts"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Calibration derivation + the deprecated core.calibration shims
+# ---------------------------------------------------------------------------
+
+
+class TestDeriveCalibration:
+    def test_table_properties(self):
+        tab = derive_calibration(v5e_pod_topology(), ps=[16, 64, 256],
+                                 distances=[1, 4, 16])
+        assert tab.c_avg(4) >= 1.0
+        assert tab.c_max(256, 16) >= tab.c_avg(16) - 1e-9
+        assert tab.c_max(1024, 4) >= 1.0  # extrapolated
+
+    def test_des_mode_bounded_by_static(self):
+        topo = v5e_pod_topology()
+        for d in (1, 4, 16, 32):
+            stat = shift_factors(topo, 256, d)
+            des = shift_factors(topo, 256, d, mode="des")
+            assert des[1] <= stat[1] + 1e-9
+            assert des[0] >= 1.0 and des[1] >= des[0] - 1e-9
+
+    def test_legacy_shim_matches_and_warns_once(self):
+        import repro.core.calibration as cal
+        cal._MOVED_WARNED.discard("ContentionSimulator")
+        with pytest.warns(DeprecationWarning, match="moved to repro.sim"):
+            legacy = cal.ContentionSimulator(torus=(8, 8))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second construction: silent
+            cal.ContentionSimulator(torus=(4, 4))
+        assert legacy.factors(64, 4) == shift_factors(Torus((8, 8)), 64, 4)
+        old = legacy.build_table(ps=[16, 64], distances=[1, 4])
+        new = derive_calibration(Torus((8, 8)), ps=[16, 64], distances=[1, 4])
+        assert old.avg == new.avg and old.mx == new.mx
+
+    def test_legacy_factory_shims(self):
+        from repro.core.calibration import (hopper_like_simulator,
+                                            v5e_pod_simulator)
+        assert v5e_pod_simulator().torus == (16, 16)
+        assert hopper_like_simulator().torus == (16, 16, 16)
+
+
+# ---------------------------------------------------------------------------
+# Tuner: two-stage planning (closed-form shortlist -> sim re-rank)
+# ---------------------------------------------------------------------------
+
+
+class TestTunerSimRefine:
+    def test_refine_sim_rerank_and_cache(self, tmp_path):
+        t = Tuner(plan_dir=str(tmp_path))
+        kw = dict(device_count=16, platform="cpu", machine="tpu-v5e")
+        plan = t.plan("matmul", 4096, refine="sim", **kw)
+        assert "sim_total" in plan.predicted
+        assert any(k.startswith("sim/") for k in plan.predicted)
+        assert t.stats["sim_evals"] >= 2
+        # the refined plan caches under its own key ...
+        plain = t.plan("matmul", 4096, **kw)
+        assert "sim_total" not in plain.predicted
+        # ... hits in memory and survives the disk roundtrip (schema v2)
+        hits0 = t.stats["cache_hits"]
+        again = t.plan("matmul", 4096, refine="sim", **kw)
+        assert t.stats["cache_hits"] == hits0 + 1
+        assert again.predicted == plan.predicted
+        t.cache.clear_memory()
+        disk = t.plan("matmul", 4096, refine="sim", **kw)
+        assert disk.predicted["sim_total"] == plan.predicted["sim_total"]
+
+    def test_refine_rejects_unknown_stage(self, tmp_path):
+        t = Tuner(plan_dir=str(tmp_path))
+        with pytest.raises(ValueError, match="refine"):
+            t.plan("matmul", 512, device_count=4, platform="cpu",
+                   refine="bogus")
