@@ -145,6 +145,18 @@ def bench_sim():
          f"max_rel_err_nocal={res['max_rel_err_nocal']:.1e}")
 
 
+def bench_telemetry():
+    t0 = time.perf_counter()
+    from benchmarks.bench_telemetry import main as tele
+    res = tele()
+    _save("BENCH_telemetry", res)
+    emit("telemetry_loop", (time.perf_counter() - t0) * 1e6,
+         f"record={res['record_runs_per_sec']:.0f}/s "
+         f"join={res['join_rows_per_sec']:.0f}/s "
+         f"refit={res['refit_seconds']:.2f}s "
+         f"compact={res['compact_runs_per_sec']:.0f}/s")
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -178,6 +190,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "tuner": bench_tuner,
     "sim": bench_sim,
+    "telemetry": bench_telemetry,
 }
 
 

@@ -19,10 +19,9 @@ methodology, the numbers are machine-specific.
 Because a single-process CPU run cannot observe *per-rank* completion times
 (everything is jitted SPMD), the repo derives deterministic
 ``C_avg``/``C_max`` surfaces from a dimension-ordered-routing link-load
-model of a torus.  That model now lives in ``repro.sim`` (topologies, the
+model of a torus.  That model lives in ``repro.sim`` (topologies, the
 link-contention network engine, and the full per-rank program simulator);
-``ContentionSimulator`` here is a deprecated shim over
-``repro.sim.derive_calibration`` kept for one release.
+see ``repro.sim.derive_calibration``.
 
 ``fit_hopper_calibration`` recovers the paper's (unpublished) calibration
 surface by fitting ``ParametricCalibration`` to the paper's *published*
@@ -47,8 +46,8 @@ from .. import compat
 from .fitting import multistart_nelder_mead
 from .machine import CPU_HOST, HOPPER, Machine
 from .paper_data import CORE_COUNTS, PAPER_TABLES
-from .perfmodel import (CalibrationTable, CommModel, ComputeModel,
-                        EfficiencyCurve, HOPPER_EFFICIENCY, ParametricCalibration,
+from .perfmodel import (CommModel, ComputeModel, EfficiencyCurve,
+                        HOPPER_EFFICIENCY, ParametricCalibration,
                         ROUTINE_FLOPS)
 
 ARTIFACTS_DIR = os.environ.get(
@@ -208,69 +207,6 @@ def bench_contention(n_procs: int, distance: int, words: int = 1 << 20,
         jax.block_until_ready(run(xs))
         best = min(best, time.perf_counter() - t0)
     return best
-
-
-# ---------------------------------------------------------------------------
-# Torus link-load contention simulator — MOVED to repro.sim (deprecated shims)
-# ---------------------------------------------------------------------------
-
-_MOVED_WARNED: set = set()
-
-
-def _warn_moved(name: str, replacement: str) -> None:
-    if name in _MOVED_WARNED:
-        return
-    _MOVED_WARNED.add(name)
-    import warnings
-    warnings.warn(
-        f"repro.core.calibration.{name} has moved to repro.sim; use "
-        f"{replacement} instead (this shim will be removed)",
-        DeprecationWarning, stacklevel=3)
-
-
-@dataclasses.dataclass
-class ContentionSimulator:
-    """.. deprecated:: superseded by ``repro.sim``.
-
-    The DOR link-load model now lives in the full per-rank simulator:
-    ``repro.sim.Torus`` is the topology, ``repro.sim.shift_factors`` /
-    ``repro.sim.derive_calibration`` produce the (bit-identical) C
-    surfaces, and ``repro.sim.simulate_program`` replays whole cost-IR
-    programs on it.  This shim delegates and warns once.
-    """
-
-    torus: tuple[int, ...]
-
-    def __post_init__(self):
-        _warn_moved("ContentionSimulator",
-                    "repro.sim.Torus + shift_factors/derive_calibration")
-
-    @property
-    def _topology(self):
-        from ..sim import Torus
-        return Torus(self.torus)
-
-    def factors(self, p: int, distance: int) -> tuple[float, float]:
-        """(C_avg, C_max) when all p ranks send rank -> rank+distance."""
-        from ..sim import shift_factors
-        return shift_factors(self._topology, p, distance)
-
-    def build_table(self, ps: Sequence[int],
-                    distances: Sequence[int]) -> CalibrationTable:
-        from ..sim import derive_calibration
-        return derive_calibration(self._topology, ps, distances)
-
-
-def hopper_like_simulator() -> ContentionSimulator:
-    """.. deprecated:: use ``repro.sim.hopper_like_topology()``."""
-    _warn_moved("hopper_like_simulator", "repro.sim.hopper_like_topology")
-    return ContentionSimulator(torus=(16, 16, 16))
-
-
-def v5e_pod_simulator() -> ContentionSimulator:
-    """.. deprecated:: use ``repro.sim.v5e_pod_topology()``."""
-    _warn_moved("v5e_pod_simulator", "repro.sim.v5e_pod_topology")
-    return ContentionSimulator(torus=(16, 16))
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,27 @@ def polyval(coeffs: np.ndarray, x) -> np.ndarray:
     return np.polyval(coeffs, x)
 
 
+def ridge_lstsq(A: np.ndarray, b: np.ndarray, lam: float = 0.0) -> np.ndarray:
+    """Regularized least squares: argmin ||A x - b||^2 + lam ||x||^2.
+
+    The L2 penalty shrinks the solution toward zero, which is exactly what
+    online recalibration wants — a handful of noisy measured runs should
+    nudge a model parameter, not yank it (lam = 0 recovers plain lstsq).
+
+    Solved as lstsq on the ridge-augmented system [A; sqrt(lam) I], which
+    keeps A's conditioning (no normal equations) and degrades to the
+    least-norm solution for singular A at lam = 0, like np.linalg.lstsq."""
+    A = np.asarray(A, dtype=float)
+    b = np.asarray(b, dtype=float)
+    if A.ndim == 1:
+        A = A[:, None]
+    n = A.shape[1]
+    A_aug = np.vstack([A, float(np.sqrt(max(lam, 0.0))) * np.eye(n)])
+    b_aug = np.concatenate([b, np.zeros(n)])
+    x, *_ = np.linalg.lstsq(A_aug, b_aug, rcond=None)
+    return x
+
+
 def nelder_mead(
     f: Callable[[np.ndarray], float],
     x0: np.ndarray,

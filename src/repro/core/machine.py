@@ -15,6 +15,8 @@ Units: seconds, flop/s, bytes, and "words" (``word_bytes`` per element —
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Optional
 
 
@@ -37,10 +39,25 @@ class Machine:
     # -- cross-pod (multi-pod meshes only) -----------------------------------
     dcn_bandwidth: Optional[float] = None   # per-host DCN [B/s]
     notes: str = ""
+    # -- profile revision ----------------------------------------------------
+    # Bumped (never mutated in place) when measured-run feedback refits the
+    # profile or drift detection declares the current one stale.  The
+    # fingerprint hashes it, so every revision owns distinct plan-cache and
+    # telemetry keys.
+    revision: int = 0
 
     @property
     def peak_flops_per_thread(self) -> float:
         return self.peak_flops_per_unit / self.threads_per_unit
+
+    def fingerprint(self) -> str:
+        """Short stable hash of every dataclass field.  Any profile change —
+        re-measured peak, new beta, a drift-bumped ``revision`` — yields a
+        new fingerprint, which is what keys the tuner plan cache and the
+        telemetry run store."""
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True,
+                          default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
     def peak_flops(self, units: int) -> float:
         return units * self.peak_flops_per_unit

@@ -9,7 +9,10 @@ Two API levels:
 * **model-guided** — ``matmul`` / ``trsm`` / ``cholesky`` take global
   operands, consult ``repro.tuner`` for the best (variant, c, grid,
   local kernel) on the available devices, and execute it (plans are
-  cached persistently under ``artifacts/plans/``).
+  cached persistently under ``artifacts/plans/``).  With telemetry on
+  (``REPRO_TELEMETRY=1`` or per-call ``observe=True``) each call also
+  records its measured per-phase times into ``repro.telemetry`` — the
+  feedback loop that validates and refits the models.
 """
 
 from .grid import distribute, make_grid_mesh, square_grid_mesh
@@ -45,8 +48,9 @@ ALGORITHMS = {
 def matmul(A, B, **kwargs):
     """C = A @ B via the tuner-selected Cannon/SUMMA variant and grid.
 
-    Keyword args: ``devices``, ``tuner``, ``local_kernel`` ("pallas"/"jnp");
-    see ``repro.tuner.dispatch.matmul``.
+    Keyword args: ``devices``, ``tuner``, ``local_kernel`` ("pallas"/"jnp"),
+    ``observe`` (record this run's measured phases); see
+    ``repro.tuner.dispatch.matmul``.
     """
     from ..tuner import dispatch
     return dispatch.matmul(A, B, **kwargs)

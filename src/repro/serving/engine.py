@@ -2,7 +2,12 @@
 the uniform Model facade (KV caches for attention archs, recurrent state
 for SSM/hybrid).  Used by the serving example and the decode-shape
 benchmark; the dry-run lowers ``serve_step`` (one new token against a full
-cache) directly."""
+cache) directly.
+
+With telemetry recording on (``REPRO_TELEMETRY=1`` /
+``repro.telemetry.enable()``) every ``generate`` call emits one measured
+run — prefill and decode as separate phases, blocked to completion — so
+the serving path feeds the same measured-run loop as linalg dispatch."""
 
 from __future__ import annotations
 
@@ -74,26 +79,61 @@ class Engine:
                                         caches, memory)
         return logits, caches
 
+    def _timer(self, seq_len: int):
+        """A telemetry PhaseTimer tagged for this engine, or None when
+        recording is off (the only cost paid on the fast path)."""
+        from .. import telemetry
+        if not telemetry.enabled():
+            return None
+        from ..tuner.plan import machine_fingerprint
+        from ..tuner.registry import DEFAULT_REGISTRY, machine_for_platform
+        devs = jax.devices()
+        platform = devs[0].platform
+        name = machine_for_platform(platform)
+        try:
+            profile = DEFAULT_REGISTRY.machine(name).machine
+        except KeyError:
+            profile = name
+        fp = machine_fingerprint(profile, platform,
+                                 getattr(devs[0], "device_kind", platform),
+                                 len(devs))
+        arch = getattr(getattr(self.model, "cfg", None), "name",
+                       type(self.model).__name__)
+        return telemetry.PhaseTimer(
+            "serve", variant=str(arch), n=seq_len,
+            p=len(devs), machine=name, fingerprint=fp, kind="serve",
+            meta={"max_new_tokens": self.cfg.max_new_tokens})
+
     def generate(self, prompts: jax.Array, *, batch_inputs: Optional[Dict[str, Any]] = None,
                  seed: int = 0) -> jax.Array:
         """prompts: (B, S) int32.  Returns (B, S + max_new) tokens."""
         b, s = prompts.shape
+        pt = self._timer(s)
         memory = None
         if batch_inputs:
             memory = self.model.encode_memory(self.params, batch_inputs)
         caches = self.model.init_cache(b, self.cfg.max_cache_len)
-        logits, caches = self._ingest(prompts, caches, memory)
+        from ..telemetry import phase_scope
+        with phase_scope(pt, "prefill"):
+            logits, caches = self._ingest(prompts, caches, memory)
+            if pt is not None:
+                jax.block_until_ready(logits)
         key = jax.random.PRNGKey(seed)
         out = [prompts]
         tok = None
-        for t in range(self.cfg.max_new_tokens):
-            if self.cfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits[:, -1] / self.cfg.temperature)[:, None]
-            else:
-                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            out.append(tok.astype(jnp.int32))
-            logits, caches = self._step(self.params, tok.astype(jnp.int32),
-                                        caches, memory)
+        with phase_scope(pt, "decode"):
+            for t in range(self.cfg.max_new_tokens):
+                if self.cfg.temperature > 0:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        sub, logits[:, -1] / self.cfg.temperature)[:, None]
+                else:
+                    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                out.append(tok.astype(jnp.int32))
+                logits, caches = self._step(self.params, tok.astype(jnp.int32),
+                                            caches, memory)
+            if pt is not None:
+                jax.block_until_ready(logits)
+        if pt is not None:
+            pt.emit()
         return jnp.concatenate(out, axis=1)

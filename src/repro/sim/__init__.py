@@ -18,8 +18,7 @@ contention emerges from where traffic actually collides:
                 utilization, overlap efficiency) + Chrome-trace emission
                 under ``artifacts/traces/``
   calibrate.py  ``derive_calibration``: C_avg / C_max tables from
-                simulated link loads (subsumes the legacy
-                ``core.calibration.ContentionSimulator``)
+                simulated link loads
 
 On a contention-free topology the simulated makespan equals the
 closed-form ``est_NoCal`` estimate to float round-off (gated in CI); on a

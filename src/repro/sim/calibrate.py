@@ -1,15 +1,15 @@
 """Deriving ``C_avg`` / ``C_max`` calibration surfaces from simulated link
 loads — the planning surface for machines we cannot benchmark (the paper's
-extrapolation use-case), subsuming the legacy
-``core.calibration.ContentionSimulator``.
+extrapolation use-case).
 
 Two derivation modes over the same topology layer:
 
 * ``"static"`` (default) — the calibration factor of a rank is the peak
   load on its own DOR path when all ``p`` ranks shift simultaneously
-  (serialization on the most-contended link).  This reproduces the legacy
-  ``ContentionSimulator.factors`` numbers bit-for-bit, so tables consumed
-  by the LM-step model and the tuner are unchanged by the migration.
+  (serialization on the most-contended link).  This reproduces the
+  pre-PR-3 ``core.calibration.ContentionSimulator`` numbers bit-for-bit,
+  so tables consumed by the LM-step model and the tuner were unchanged by
+  the migration.
 * ``"des"`` — run the shift pattern through the fluid max-rate
   :class:`~repro.sim.network.Network` and read the factor off the actual
   completion times (``C = t / t_ideal``).  Dynamic factors are <= the

@@ -5,7 +5,7 @@ A :class:`Topology` maps an ordered pair of node indices to the sequence of
 
 * :class:`Torus` — a k-ary n-cube with dimension-ordered routing (DOR),
   the shape of the paper's Gemini 3D torus and of TPU ICI meshes.  Routing
-  is identical to the legacy ``core.calibration.ContentionSimulator``
+  is identical to the pre-PR-3 ``core.calibration.ContentionSimulator``
   (shortest wraparound direction per dimension, ties broken forward), so
   calibration tables derived through this layer reproduce the old numbers
   bit-for-bit.

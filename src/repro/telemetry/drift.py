@@ -1,0 +1,90 @@
+"""Drift detection: when measurements stop matching the model, retire it.
+
+A refit profile is only valid while the hardware keeps behaving the way
+the residuals said it did — thermal throttling, a noisy neighbor, a BLAS
+or XLA upgrade all shift the ground truth under a frozen model.  The
+detector keeps a rolling mean of the per-op relative error (newest
+``window`` residual rows per op); when it crosses ``threshold`` the
+machine profile's ``revision`` is bumped and re-registered, which changes
+``Machine.fingerprint()`` and therefore every tuner plan-cache key — the
+stale plans are not deleted, they simply can never be recalled again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.machine import Machine
+from .residuals import Residual
+
+#: default rolling window (rows per op) and mean-relative-error threshold.
+DEFAULT_WINDOW = 10
+DEFAULT_THRESHOLD = 0.75
+#: fewer rows than this in an op's window is not evidence, just noise.
+MIN_ROWS = 3
+
+
+@dataclasses.dataclass
+class DriftStatus:
+    """Rolling accuracy of one op against the current profile."""
+
+    op: str
+    rolling_mean_rel_err: float
+    n_rows: int
+    window: int
+    threshold: float
+
+    @property
+    def drifted(self) -> bool:
+        return (self.n_rows >= MIN_ROWS
+                and self.rolling_mean_rel_err > self.threshold)
+
+
+def check(rows: Sequence[Residual], *, threshold: float = DEFAULT_THRESHOLD,
+          window: int = DEFAULT_WINDOW) -> Dict[str, DriftStatus]:
+    """Per-op rolling mean relative error over the newest ``window`` rows
+    (model-source rows only; the sim flavor has its own error profile)."""
+    by_op: Dict[str, List[Residual]] = {}
+    for r in rows:
+        if r.source != "model":
+            continue
+        by_op.setdefault(r.op, []).append(r)
+    out: Dict[str, DriftStatus] = {}
+    for op, op_rows in by_op.items():
+        op_rows.sort(key=lambda r: r.timestamp)
+        tail = op_rows[-window:]
+        err = float(np.mean([r.rel_err for r in tail]))
+        out[op] = DriftStatus(op=op, rolling_mean_rel_err=err,
+                              n_rows=len(tail), window=window,
+                              threshold=threshold)
+    return out
+
+
+def bump_revision(registry, machine_name: str) -> Machine:
+    """Re-register ``machine_name`` with ``revision + 1`` (surfaces kept).
+
+    The new fingerprint retires every plan-cache entry and telemetry file
+    keyed by the old one; returns the new :class:`Machine`."""
+    surface = registry.machine(machine_name)
+    machine = dataclasses.replace(surface.machine,
+                                  revision=surface.machine.revision + 1)
+    registry.register_machine(machine, surface.efficiency,
+                              surface.calibration, overwrite=True)
+    return machine
+
+
+def detect_and_invalidate(rows: Sequence[Residual], registry,
+                          machine_name: str, *,
+                          threshold: float = DEFAULT_THRESHOLD,
+                          window: int = DEFAULT_WINDOW
+                          ) -> Optional[Machine]:
+    """The full drift step: check the rolling error; on any drifted op,
+    bump the machine revision.  Returns the new Machine (None when the
+    profile is still healthy)."""
+    statuses = check(rows, threshold=threshold, window=window)
+    if not any(s.drifted for s in statuses.values()):
+        return None
+    return bump_revision(registry, machine_name)

@@ -1,0 +1,208 @@
+"""Online recalibration: residuals -> a new machine-profile revision.
+
+The paper parameterizes its models once from portable benchmarks; this
+module closes the loop by *re*-parameterizing them from production
+residuals (Bienz et al.'s measurement-driven refinement of alpha-beta
+models, applied to the calibrated surfaces here):
+
+* compute side — a Nelder--Mead fit (``core.fitting``) of a speed scale
+  and a block-size shape factor against the compute-dominated residual
+  rows updates every :class:`EfficiencyCurve`; speed beyond the physical
+  ``eff_max`` ceiling is attributed to the machine's measured peak
+  (exactly what ``measured_compute_model`` does offline);
+* comm side — a ridge-regularized least-squares scale
+  (``core.fitting.ridge_lstsq``) on the comm-dominated rows rescales the
+  ``C_avg`` / ``C_max`` surfaces into a fresh :class:`CalibrationTable`.
+
+Nothing is mutated in place: ``refit`` returns a :class:`RefitResult`
+holding a revision-bumped :class:`Machine` plus new surfaces, and
+``apply`` registers that revision, which changes the machine fingerprint
+and thereby retires every stale plan-cache entry and telemetry file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..core.fitting import multistart_nelder_mead, ridge_lstsq
+from ..core.machine import Machine
+from ..core.perfmodel import Calibration, CalibrationTable, EfficiencyCurve
+from .residuals import Residual, split_comm_comp
+
+#: fitted scales are clamped to this symmetric range — a refit may move a
+#: profile a lot (the CPU fallback constants are conservative on purpose)
+#: but never to absurdity.
+MAX_SCALE = 64.0
+
+
+@dataclasses.dataclass
+class RefitResult:
+    """A candidate machine-profile revision, not yet registered."""
+
+    machine: Machine                            # revision bumped, peak updated
+    efficiency: Dict[str, EfficiencyCurve]
+    calibration: Calibration
+    speed_scale: float          # fitted compute speed multiplier (>1: faster)
+    shape_scale: float          # fitted multiplier on every curve's n0
+    comm_scale: float           # fitted multiplier on C_avg / C_max
+    n_comp_rows: int
+    n_comm_rows: int
+
+    @property
+    def fingerprint(self) -> str:
+        return self.machine.fingerprint()
+
+    def apply(self, registry) -> Machine:
+        """Register the revision (same name, bumped ``revision`` field) so
+        subsequent planning and recording use it."""
+        registry.register_machine(self.machine, self.efficiency,
+                                  self.calibration, overwrite=True)
+        return self.machine
+
+
+def refit(rows: Sequence[Residual], registry=None,
+          machine_name: Optional[str] = None, *,
+          ridge_lam: float = 2.0, n_starts: int = 3) -> RefitResult:
+    """Fit a profile revision to residual rows (``source == "model"``).
+
+    ``ridge_lam`` regularizes both fits toward "no change": a handful of
+    noisy runs nudges the profile, a consistent bias moves it.
+    """
+    if registry is None:
+        from ..tuner.registry import DEFAULT_REGISTRY
+        registry = DEFAULT_REGISTRY
+    rows = [r for r in rows if r.source == "model"]
+    if not rows:
+        raise ValueError("refit needs at least one model-source residual row")
+    machine_name = machine_name or rows[0].machine
+    rows = [r for r in rows if r.machine == machine_name]
+    if not rows:
+        raise ValueError(f"no residual rows for machine {machine_name!r} — "
+                         "refusing to emit an evidence-free revision")
+    surface = registry.machine(machine_name)
+    # One median-ratio representative per scenario: wall-clock spikes (GC,
+    # noisy neighbors) must not drag the squared-loss fits.
+    comm_rows, comp_rows = split_comm_comp(_robust_rows(rows))
+
+    comm_scale = _fit_comm_scale(comm_rows, ridge_lam)
+    speed, shape = _fit_compute(comp_rows, surface, comm_scale, ridge_lam,
+                                n_starts)
+
+    # Decompose the speed scale: what eff_max can absorb stays in the
+    # curves; the remainder is a re-measured peak (curves cannot exceed 1).
+    efficiency = {}
+    max_eff = max(c.eff_max for c in surface.efficiency.values())
+    eff_part = min(speed, 0.98 / max_eff) if max_eff > 0 else 1.0
+    eff_part = max(eff_part, 0.02 / max_eff) if max_eff > 0 else 1.0
+    peak_part = speed / eff_part
+    for rout, curve in surface.efficiency.items():
+        new_max = float(np.clip(curve.eff_max * eff_part, 1e-3, 0.98))
+        new_n0 = float(np.clip(curve.n0 * shape, 1.0, 1e7))
+        efficiency[rout] = EfficiencyCurve(
+            new_max, new_n0, eff_min=min(curve.eff_min, new_max / 2.0))
+
+    calibration = _scaled_calibration(surface.calibration, comm_scale,
+                                      [r.p for r in rows])
+    machine = dataclasses.replace(
+        surface.machine,
+        peak_flops_per_unit=surface.machine.peak_flops_per_unit * peak_part,
+        revision=surface.machine.revision + 1)
+    return RefitResult(machine=machine, efficiency=efficiency,
+                       calibration=calibration, speed_scale=speed,
+                       shape_scale=shape, comm_scale=comm_scale,
+                       n_comp_rows=len(comp_rows), n_comm_rows=len(comm_rows))
+
+
+def _robust_rows(rows: Sequence[Residual]) -> List[Residual]:
+    """The median-log-ratio row of every (op, variant, n, p, c, phase)
+    group — the fit's view of the data, outlier-proof by construction."""
+    groups: Dict[tuple, List[Residual]] = {}
+    for r in rows:
+        key = (r.op, r.variant, r.n, r.p, r.c, r.phase)
+        groups.setdefault(key, []).append(r)
+    out: List[Residual] = []
+    for group in groups.values():
+        group.sort(key=lambda r: r.log_ratio)
+        out.append(group[(len(group) - 1) // 2])
+    return out
+
+
+def _fit_comm_scale(comm_rows: Sequence[Residual], lam: float) -> float:
+    """Ridge scalar in log space: measured ~= comm_scale * predicted."""
+    if not comm_rows:
+        return 1.0
+    y = np.array([r.log_ratio for r in comm_rows])
+    theta = ridge_lstsq(np.ones((y.size, 1)), y, lam=lam)[0]
+    return float(np.clip(math.exp(theta), 1.0 / MAX_SCALE, MAX_SCALE))
+
+
+def _block_of(r: Residual) -> float:
+    """Nominal local block size of a residual's scenario — ``n / g`` on the
+    (c, g, g) grid — used to re-evaluate the efficiency curve shape without
+    re-walking the program."""
+    g = math.sqrt(max(float(r.p) / max(float(r.c), 1.0), 1.0))
+    return max(float(r.n) / g, 1.0)
+
+
+def _fit_compute(comp_rows: Sequence[Residual], surface, comm_scale: float,
+                 lam: float, n_starts: int):
+    """Nelder--Mead over (log speed, log shape).
+
+    A row's adjusted prediction divides its compute seconds by
+    ``speed * eff_shape(block)/eff_old(block)`` and scales its comm
+    seconds by the already-fitted ``comm_scale`` — so the fit targets
+    exactly the part of the residual the compute model owns.
+    """
+    if not comp_rows:
+        return 1.0, 1.0
+    eff = surface.efficiency.get("dgemm") or next(iter(
+        surface.efficiency.values()))
+    blocks = np.array([_block_of(r) for r in comp_rows])
+    meas = np.array([r.measured for r in comp_rows])
+    pcomp = np.array([max(r.pred_comp, 0.0) for r in comp_rows])
+    pcomm = np.array([max(r.pred_comm, 0.0) for r in comp_rows])
+    # exposed may be < comm + comp under overlap: scale both ledgers and
+    # keep the row's exposed/serialized ratio fixed
+    exposed = np.array([r.predicted for r in comp_rows])
+    serial = np.maximum(pcomp + pcomm, 1e-300)
+    overlap_keep = exposed / serial
+    eff_old = eff.ev(blocks)
+
+    def loss(theta):
+        la, lb = float(theta[0]), float(theta[1])
+        a = math.exp(np.clip(la, -math.log(MAX_SCALE), math.log(MAX_SCALE)))
+        b = math.exp(np.clip(lb, -2.0, 2.0))
+        # same floor as EfficiencyCurve.ev, so the loss matches what the
+        # rebuilt curve will actually predict after apply()
+        eff_new = eff.eff_max * (1.0 - np.exp(-blocks / (b * eff.n0)))
+        eff_new = np.maximum(eff_new, eff.eff_min)
+        pred = (pcomp * eff_old / (a * eff_new)
+                + pcomm * comm_scale) * overlap_keep
+        resid = np.log(meas) - np.log(np.maximum(pred, 1e-300))
+        return float(np.mean(resid ** 2)
+                     + 0.01 * lam * (la ** 2 + lb ** 2) / max(meas.size, 1))
+
+    theta, _ = multistart_nelder_mead(loss, np.array([0.0, 0.0]),
+                                      n_starts=n_starts, max_iter=300)
+    speed = float(np.clip(math.exp(theta[0]), 1.0 / MAX_SCALE, MAX_SCALE))
+    shape = float(np.clip(math.exp(theta[1]), math.exp(-2.0), math.exp(2.0)))
+    return speed, shape
+
+
+def _scaled_calibration(old: Calibration, comm_scale: float,
+                        ps: Sequence[int]) -> Calibration:
+    """A fresh CalibrationTable sampling the old surfaces scaled by the
+    fitted factor (floored at the C >= 1 contract)."""
+    if abs(comm_scale - 1.0) < 1e-12:
+        return old
+    grid_p = sorted({2.0, 4.0, 16.0, 64.0, 256.0}
+                    | {float(max(p, 2)) for p in ps})
+    grid_d = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+    avg = {d: max(1.0, float(old.c_avg(d)) * comm_scale) for d in grid_d}
+    mx = {(p, d): max(1.0, float(old.c_max(p, d)) * comm_scale)
+          for p in grid_p for d in grid_d}
+    return CalibrationTable(avg=avg, mx=mx)

@@ -82,9 +82,11 @@ class Tuner:
 
     def __init__(self, registry: Optional[PerfModelRegistry] = None,
                  cache: Optional[PlanCache] = None,
-                 plan_dir: Optional[str] = None):
+                 plan_dir: Optional[str] = None,
+                 store=None):
         self.registry = registry or DEFAULT_REGISTRY
         self.cache = cache or PlanCache(plan_dir)
+        self.store = store      # telemetry RunStore for observe=True records
         self.stats = {"model_evals": 0, "cache_hits": 0}
         self._lm_cal = None
         self._lock = threading.Lock()
@@ -100,7 +102,8 @@ class Tuner:
              local_kernel: Optional[str] = None,
              use_cache: bool = True,
              refine: Optional[str] = None,
-             shortlist: int = 4) -> ExecutionPlan:
+             shortlist: int = 4,
+             observe: bool = False) -> ExecutionPlan:
         """Resolve (or recall) the best execution plan for ``op`` at size
         ``n`` on the given device pool.
 
@@ -115,6 +118,12 @@ class Tuner:
         by *simulated* time (``predicted["sim_total"]``).  Refined plans
         cache under their own key, so closed-form plans are never
         shadowed.
+
+        ``observe=True`` records the planning decision (chosen variant +
+        predicted timing) into the telemetry run store, so the measured
+        feedback loop can later compare what the model promised with what
+        dispatch delivered — it records regardless of the global
+        ``REPRO_TELEMETRY`` switch (an explicit per-call opt-in).
         """
         if refine not in (None, "sim"):
             raise ValueError(f"refine must be None or 'sim', got {refine!r}")
@@ -139,7 +148,14 @@ class Tuner:
                              f"got {local_kernel!r}")
         local_kernel = local_kernel or ("pallas" if platform == "tpu" else "jnp")
 
-        fp = machine_fingerprint(machine, platform, device_kind, device_count)
+        # Key plans by the registered Machine *profile* (its fingerprint
+        # hashes every field, incl. the telemetry-bumped revision), not the
+        # bare name — refits and drift invalidation change the key.
+        try:
+            profile = self.registry.machine(machine).machine
+        except KeyError:
+            profile = machine
+        fp = machine_fingerprint(profile, platform, device_kind, device_count)
         # refine and shortlist both shape the refined decision, so they are
         # part of the cache identity (closed-form plans keep their old keys)
         key = plan_key(fp, op if refine is None
@@ -161,6 +177,8 @@ class Tuner:
                         import dataclasses
                         plan = dataclasses.replace(plan,
                                                    local_kernel=local_kernel)
+                    if observe:
+                        self._observe(plan)
                     return plan
 
         plan = self._build_plan(op, n, device_count, machine, dtype,
@@ -170,7 +188,15 @@ class Tuner:
             self.stats["model_evals"] += 1
         if use_cache:
             self.cache.put(key, plan.to_dict())
+        if observe:
+            self._observe(plan)
         return plan
+
+    def _observe(self, plan: ExecutionPlan) -> None:
+        from ..telemetry import observe_plan
+        observe_plan(plan, store=self.store)
+        with self._lock:
+            self.stats["observed"] = self.stats.get("observed", 0) + 1
 
     def _build_plan(self, op: str, n: int, device_count: int, machine: str,
                     dtype: str, local_kernel: str, fp: str,

@@ -15,11 +15,20 @@ chosen ``shard_map`` variant with the planned local kernels:
 
 Meshes and compiled executors are memoized per (grid, devices, variant,
 kernel), so a cache-hit call pays only plan lookup + padding + dispatch.
+
+When telemetry recording is on (``REPRO_TELEMETRY=1`` /
+``repro.telemetry.enable()`` / per-call ``observe=True``) every dispatch
+emits one measured :class:`~repro.telemetry.RunRecord` with per-phase
+wall times (plan / distribute / execute, the execute phase blocked to
+completion) tagged by the plan's machine fingerprint — the raw material
+of the measured-run feedback loop.  With recording off the only added
+cost is one boolean check per call, and results stay unblocked.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -171,40 +180,70 @@ def _resolve(devices: Optional[Sequence], plan_p: int) -> Tuple:
 
 
 def execute(plan: ExecutionPlan, *operands,
-            devices: Optional[Sequence] = None):
+            devices: Optional[Sequence] = None, observe: bool = False,
+            store=None, _plan_seconds: float = 0.0):
     """Run an already-resolved plan on its operands (benchmarks use this to
-    force specific — including deliberately bad — variants)."""
+    force specific — including deliberately bad — variants).
+
+    ``observe=True`` records this run's measured phases into the telemetry
+    store even when global recording is off; ``store`` routes the record
+    (default: the global default store).  ``_plan_seconds`` lets the
+    model-guided wrappers account the planning time they already spent."""
+    from .. import telemetry
+    from ..telemetry import phase_scope as _phase
     devs = _resolve(devices, plan.p)
     interpret = devs[0].platform != "tpu"
     mesh = _mesh_for(plan.g, plan.c, devs)
     fn = _executor(plan, mesh, devs, interpret)
+    pt = None
+    if observe or telemetry.enabled():
+        pt = telemetry.timer_for_plan(plan, kind="dispatch")
+        if _plan_seconds > 0.0:
+            pt.add("plan", _plan_seconds)
     n = plan.n
     g, c = plan.g, plan.c
     if plan.algo in ("cannon", "summa"):
         a, b = (jnp.asarray(x) for x in operands)
         m = _round_up(n, g)
-        ad = distribute(_pad_zero(a, m, m), mesh, P("row", "col"))
-        bd = distribute(_pad_zero(b, m, m), mesh, P("row", "col"))
-        return fn(ad, bd)[:n, :n]
-    if plan.algo == "trsm":
+        with _phase(pt, "distribute"):
+            ad = distribute(_pad_zero(a, m, m), mesh, P("row", "col"))
+            bd = distribute(_pad_zero(b, m, m), mesh, P("row", "col"))
+        with _phase(pt, "execute"):
+            out = fn(ad, bd)[:n, :n]
+            if pt is not None:
+                jax.block_until_ready(out)
+    elif plan.algo == "trsm":
         u, b = (jnp.asarray(x) for x in operands)
         m = _round_up(n, g)
         mb = _round_up(n, c * g)
         bx_spec = P(("lyr", "row"), "col") if c > 1 else P("row", "col")
-        ud = distribute(_pad_eye(u, m), mesh, P("row", "col"))
-        bd = distribute(_pad_zero(b, mb, m), mesh, bx_spec)
-        return fn(ud, bd)[:n, :n]
-    if plan.algo == "cholesky":
+        with _phase(pt, "distribute"):
+            ud = distribute(_pad_eye(u, m), mesh, P("row", "col"))
+            bd = distribute(_pad_zero(b, mb, m), mesh, bx_spec)
+        with _phase(pt, "execute"):
+            out = fn(ud, bd)[:n, :n]
+            if pt is not None:
+                jax.block_until_ready(out)
+    elif plan.algo == "cholesky":
         (a,) = (jnp.asarray(x) for x in operands)
         m = _round_up(n, g)
-        ad = distribute(_pad_eye(a, m), mesh, P("row", "col"))
-        return fn(ad)[:n, :n]
-    raise ValueError(f"unknown algo {plan.algo!r}")
+        with _phase(pt, "distribute"):
+            ad = distribute(_pad_eye(a, m), mesh, P("row", "col"))
+        with _phase(pt, "execute"):
+            out = fn(ad)[:n, :n]
+            if pt is not None:
+                jax.block_until_ready(out)
+    else:
+        raise ValueError(f"unknown algo {plan.algo!r}")
+    if pt is not None:
+        pt.emit(store=store, force=observe)
+    return out
 
 
 def matmul(A, B, *, devices: Optional[Sequence] = None,
            tuner: Optional[Tuner] = None,
-           local_kernel: Optional[str] = None):
+           local_kernel: Optional[str] = None,
+           observe: bool = False):
     """C = A @ B, model-guided: the tuner races the Cannon and SUMMA models
     over every realizable 2D/2.5D grid and executes the winner."""
     n = _check_square("A", A)
@@ -212,32 +251,40 @@ def matmul(A, B, *, devices: Optional[Sequence] = None,
         raise ValueError(f"A {A.shape} and B {B.shape} must match")
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
+    t0 = time.perf_counter()
     plan = t.plan("matmul", n, devices=devs, dtype=_dtype_key(A),
-                  local_kernel=local_kernel)
-    return execute(plan, A, B, devices=devs)
+                  local_kernel=local_kernel, observe=observe)
+    return execute(plan, A, B, devices=devs, observe=observe, store=t.store,
+                   _plan_seconds=time.perf_counter() - t0)
 
 
 def trsm(U, B, *, devices: Optional[Sequence] = None,
          tuner: Optional[Tuner] = None,
-         local_kernel: Optional[str] = None):
+         local_kernel: Optional[str] = None,
+         observe: bool = False):
     """Solve X U = B (U upper-triangular), model-guided."""
     n = _check_square("U", U)
     if tuple(B.shape) != tuple(U.shape):
         raise ValueError(f"U {U.shape} and B {B.shape} must match")
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
+    t0 = time.perf_counter()
     plan = t.plan("trsm", n, devices=devs, dtype=_dtype_key(U),
-                  local_kernel=local_kernel)
-    return execute(plan, U, B, devices=devs)
+                  local_kernel=local_kernel, observe=observe)
+    return execute(plan, U, B, devices=devs, observe=observe, store=t.store,
+                   _plan_seconds=time.perf_counter() - t0)
 
 
 def cholesky(A, *, devices: Optional[Sequence] = None,
              tuner: Optional[Tuner] = None,
-             local_kernel: Optional[str] = None):
+             local_kernel: Optional[str] = None,
+             observe: bool = False):
     """L with A = L L^T (A SPD), model-guided."""
     n = _check_square("A", A)
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
+    t0 = time.perf_counter()
     plan = t.plan("cholesky", n, devices=devs, dtype=_dtype_key(A),
-                  local_kernel=local_kernel)
-    return execute(plan, A, devices=devs)
+                  local_kernel=local_kernel, observe=observe)
+    return execute(plan, A, devices=devs, observe=observe, store=t.store,
+                   _plan_seconds=time.perf_counter() - t0)

@@ -44,10 +44,18 @@ def default_plan_dir() -> str:
     return os.path.join(repo, "artifacts", "plans")
 
 
-def machine_fingerprint(machine_name: str, platform: str, device_kind: str,
+def machine_fingerprint(machine, platform: str, device_kind: str,
                         device_count: int) -> str:
-    """Short stable hash of the execution substrate a plan was tuned for."""
-    blob = f"{machine_name}|{platform}|{device_kind}|{device_count}"
+    """Short stable hash of the execution substrate a plan was tuned for.
+
+    ``machine`` is a :class:`~repro.core.machine.Machine` (preferred: its
+    own ``fingerprint()`` — a hash of every profile field including the
+    telemetry-bumped ``revision`` — becomes part of the key, so refits and
+    drift invalidation retire stale plans automatically) or a plain string
+    tag for non-profile keys like the LM fsdp recommendation."""
+    tag = machine.fingerprint() if hasattr(machine, "fingerprint") \
+        else str(machine)
+    blob = f"{tag}|{platform}|{device_kind}|{device_count}"
     return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
 

@@ -167,7 +167,10 @@ class PerfModelRegistry:
                                 options=options)
 
 
-def _default_registry() -> PerfModelRegistry:
+def build_default_registry() -> PerfModelRegistry:
+    """A fresh registry with everything the repo ships.  ``DEFAULT_REGISTRY``
+    is one of these; telemetry tests build private copies so refits and
+    drift-bumped machine revisions never leak across tests."""
     reg = PerfModelRegistry()
     for program in PROGRAMS.values():
         reg.register_program(program)
@@ -185,7 +188,7 @@ def _default_registry() -> PerfModelRegistry:
     return reg
 
 
-DEFAULT_REGISTRY = _default_registry()
+DEFAULT_REGISTRY = build_default_registry()
 
 
 #: machine chosen per JAX backend platform when the caller does not name one

@@ -1,10 +1,8 @@
 """repro.sim: topology properties, the link-contention network engine,
 cross-validation against the closed-form evaluator, calibration
-derivation (incl. the deprecated core.calibration shims) and the tuner's
-sim-refined planning stage."""
+derivation and the tuner's sim-refined planning stage."""
 
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -259,7 +257,7 @@ class TestSimResult:
 
 
 # ---------------------------------------------------------------------------
-# Calibration derivation + the deprecated core.calibration shims
+# Calibration derivation
 # ---------------------------------------------------------------------------
 
 
@@ -278,25 +276,6 @@ class TestDeriveCalibration:
             des = shift_factors(topo, 256, d, mode="des")
             assert des[1] <= stat[1] + 1e-9
             assert des[0] >= 1.0 and des[1] >= des[0] - 1e-9
-
-    def test_legacy_shim_matches_and_warns_once(self):
-        import repro.core.calibration as cal
-        cal._MOVED_WARNED.discard("ContentionSimulator")
-        with pytest.warns(DeprecationWarning, match="moved to repro.sim"):
-            legacy = cal.ContentionSimulator(torus=(8, 8))
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")  # second construction: silent
-            cal.ContentionSimulator(torus=(4, 4))
-        assert legacy.factors(64, 4) == shift_factors(Torus((8, 8)), 64, 4)
-        old = legacy.build_table(ps=[16, 64], distances=[1, 4])
-        new = derive_calibration(Torus((8, 8)), ps=[16, 64], distances=[1, 4])
-        assert old.avg == new.avg and old.mx == new.mx
-
-    def test_legacy_factory_shims(self):
-        from repro.core.calibration import (hopper_like_simulator,
-                                            v5e_pod_simulator)
-        assert v5e_pod_simulator().torus == (16, 16)
-        assert hopper_like_simulator().torus == (16, 16, 16)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,461 @@
+"""repro.telemetry: run store round-trips, PhaseTimer semantics, the
+measured-vs-predicted residual join, online refit, drift invalidation —
+and the full closed loop: record real CPU dispatch runs -> join -> refit
+shrinks the error -> injected slowdown triggers drift -> the tuner
+provably ignores the stale cached plan."""
+
+import dataclasses
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core.machine import CPU_HOST, Machine
+from repro.telemetry import (PhaseTimer, Residual, RunRecord, RunStore,
+                             TELEMETRY_SCHEMA)
+from repro.tuner import (PlanCache, Tuner, build_default_registry,
+                         machine_fingerprint)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_telemetry():
+    """No telemetry test may leak global recording state (or records in
+    the repo's artifacts dir) into the rest of the suite."""
+    telemetry.reset()
+    yield
+    telemetry.reset()
+
+
+@pytest.fixture()
+def registry():
+    return build_default_registry()
+
+
+def _mk_record(store_or_none=None, **kw):
+    defaults = dict(fingerprint="fp0", machine="cpu-host", op="summa",
+                    variant="2d", n=128, p=1, c=1,
+                    phases={"execute": 1e-3})
+    defaults.update(kw)
+    rec = RunRecord(**defaults)
+    if store_or_none is not None:
+        store_or_none.append(rec)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+
+class TestRunStore:
+    def test_append_load_roundtrip(self, tmp_path):
+        store = RunStore(str(tmp_path))
+        rec = _mk_record(store, meta={"note": "x"})
+        [got] = store.load()
+        assert got == rec
+        assert store.fingerprints() == ["fp0"]
+
+    def test_files_keyed_by_fingerprint(self, tmp_path):
+        store = RunStore(str(tmp_path))
+        _mk_record(store, fingerprint="aaa")
+        _mk_record(store, fingerprint="bbb")
+        assert store.fingerprints() == ["aaa", "bbb"]
+        assert len(store.load("aaa")) == 1
+        assert len(store.load()) == 2
+
+    def test_schema_mismatch_and_garbage_lines_skipped(self, tmp_path):
+        store = RunStore(str(tmp_path))
+        rec = _mk_record(store)
+        path = store.path_for("fp0")
+        with open(path, "a") as f:
+            bad = rec.to_dict()
+            bad["schema"] = TELEMETRY_SCHEMA + 1
+            f.write(json.dumps(bad) + "\n")
+            f.write("{torn line\n")
+        assert len(store.load()) == 1
+        assert store.skipped_lines == 2
+
+    def test_compaction_drops_bad_lines_and_caps_history(self, tmp_path):
+        store = RunStore(str(tmp_path))
+        for i in range(10):
+            _mk_record(store, timestamp=float(i + 1))
+        with open(store.path_for("fp0"), "a") as f:
+            f.write("not json\n")
+        dropped = store.compact(keep_last=4)
+        assert dropped == 7  # 6 over the cap + 1 garbage line
+        kept = store.load()
+        assert [r.timestamp for r in kept] == [7.0, 8.0, 9.0, 10.0]
+        # compacted file is clean: nothing skipped on re-read
+        store2 = RunStore(str(tmp_path))
+        assert len(store2.load()) == 4 and store2.skipped_lines == 0
+
+
+# ---------------------------------------------------------------------------
+# PhaseTimer + recording switch
+# ---------------------------------------------------------------------------
+
+
+class TestPhaseTimer:
+    def test_phase_accumulates_and_decorator(self):
+        pt = PhaseTimer("summa", variant="2d", n=64)
+        for _ in range(3):
+            with pt.phase("decode"):
+                time.sleep(0.001)
+
+        @pt.wrap("prefill")
+        def work():
+            time.sleep(0.002)
+            return 7
+
+        assert work() == 7
+        assert set(pt.phases) == {"decode", "prefill"}
+        assert pt.phases["decode"] >= 0.003
+        assert pt.phases["prefill"] >= 0.002
+
+    def test_emit_respects_global_switch(self, tmp_path):
+        store = RunStore(str(tmp_path))
+        pt = PhaseTimer("summa", variant="2d", n=64, fingerprint="fp0")
+        pt.add("execute", 0.5)
+        assert pt.emit(store=store) is None          # disabled by default
+        assert pt.emit(store=store, force=True) is not None
+        telemetry.enable(store)
+        assert pt.emit() is not None
+        telemetry.disable()
+        assert pt.emit(store=store) is None
+        assert len(store.load()) == 2
+
+    def test_timer_for_plan_tags(self, registry, tmp_path):
+        t = Tuner(registry=registry, cache=PlanCache(str(tmp_path)))
+        plan = t.plan("matmul", 256, device_count=4, platform="cpu",
+                      device_kind="k")
+        pt = telemetry.timer_for_plan(plan)
+        rec = pt.record()
+        assert (rec.op, rec.variant, rec.n, rec.p, rec.c) == \
+            (plan.algo, plan.variant, 256, plan.p, plan.c)
+        assert rec.fingerprint == plan.fingerprint
+        assert rec.predicted == plan.predicted
+
+
+# ---------------------------------------------------------------------------
+# Machine fingerprints
+# ---------------------------------------------------------------------------
+
+
+class TestMachineFingerprint:
+    def test_stable_and_sensitive(self):
+        assert CPU_HOST.fingerprint() == CPU_HOST.fingerprint()
+        assert len(CPU_HOST.fingerprint()) == 12
+        bumped = dataclasses.replace(CPU_HOST, revision=1)
+        assert bumped.fingerprint() != CPU_HOST.fingerprint()
+        retuned = dataclasses.replace(CPU_HOST, peak_flops_per_unit=1e10)
+        assert retuned.fingerprint() != CPU_HOST.fingerprint()
+
+    def test_plan_fingerprint_uses_machine_profile(self, registry, tmp_path):
+        t = Tuner(registry=registry, cache=PlanCache(str(tmp_path)))
+        plan = t.plan("matmul", 128, device_count=4, platform="cpu",
+                      device_kind="k")
+        profile = registry.machine("cpu-host").machine
+        assert plan.fingerprint == machine_fingerprint(profile, "cpu", "k", 4)
+        # a string still hashes (non-profile keys like the fsdp cache)
+        assert machine_fingerprint("tag", "cpu", "k", 4) != plan.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Residual join (synthetic records: exact ratios)
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_runs(registry, factor, n_runs, op="summa", variant="2d",
+                    n=4096, p=16, machine="cpu-host", t0=1000.0):
+    """Records whose measured total is exactly ``factor`` x the model."""
+    ctx = registry.machine(machine).context()
+    res = registry.evaluate_grid(ctx, op, variant, float(n), float(p), 1.0,
+                                 1.0)
+    return [RunRecord(fingerprint="fpX", machine=machine, op=op,
+                      variant=variant, n=n, p=p, c=1,
+                      phases={"execute": float(res.total) * factor},
+                      timestamp=t0 + i)
+            for i in range(n_runs)]
+
+
+class TestJoin:
+    def test_exact_ratio_and_phase_join(self, registry):
+        runs = _synthetic_runs(registry, factor=2.0, n_runs=3)
+        rows = telemetry.join(runs, registry)
+        assert len(rows) == 3
+        for r in rows:
+            assert r.phase == "execute" and r.source == "model"
+            assert r.ratio == pytest.approx(2.0)
+            assert r.log_ratio == pytest.approx(math.log(2.0))
+            assert r.rel_err == pytest.approx(0.5)
+        assert telemetry.mean_abs_log_ratio(rows) == \
+            pytest.approx(math.log(2.0))
+
+    def test_named_phase_joins_eval_phase(self, registry):
+        ctx = registry.machine("cpu-host").context()
+        res = registry.evaluate_grid(ctx, "summa", "2d", 4096.0, 16.0, 1.0,
+                                     1.0)
+        phase = "dgemm"
+        run = RunRecord(fingerprint="f", machine="cpu-host", op="summa",
+                        variant="2d", n=4096, p=16, c=1,
+                        phases={phase: 3.0 * float(res.phases[phase].exposed),
+                                "plan": 0.1})   # overhead: no model analog
+        [row] = telemetry.join([run], registry)
+        assert row.phase == phase
+        assert row.ratio == pytest.approx(3.0)
+
+    def test_unjoinable_runs_skipped(self, registry):
+        runs = [
+            RunRecord(fingerprint="f", machine="cpu-host", op="serve",
+                      variant="LlamaModel", n=64, p=1, c=1,
+                      phases={"decode": 0.5}),       # no program registered
+            RunRecord(fingerprint="f", machine="atari-2600", op="summa",
+                      variant="2d", n=64, p=1, c=1,
+                      phases={"execute": 0.5}),      # unknown machine
+            RunRecord(fingerprint="f", machine="cpu-host", op="summa",
+                      variant="2d", n=64, p=1, c=1, kind="plan",
+                      phases={}),                    # plan record: no phases
+        ]
+        assert telemetry.join(runs, registry) == []
+
+    def test_include_sim_adds_sim_rows(self, registry):
+        runs = _synthetic_runs(registry, factor=1.5, n_runs=2, p=16)
+        rows = telemetry.join(runs, registry, include_sim=True)
+        srcs = sorted({r.source for r in rows})
+        assert srcs == ["model", "sim"]
+        sim_rows = [r for r in rows if r.source == "sim"]
+        assert len(sim_rows) == 2 and all(r.predicted > 0 for r in sim_rows)
+
+
+# ---------------------------------------------------------------------------
+# Refit + report (synthetic: known-answer)
+# ---------------------------------------------------------------------------
+
+
+class TestRefit:
+    def test_constant_factor_refit_recovers_scale(self, registry):
+        runs = _synthetic_runs(registry, factor=3.0, n_runs=8, n=8192, p=16)
+        rows = telemetry.join(runs, registry)
+        before = telemetry.mean_abs_log_ratio(rows)
+        result = telemetry.refit(rows, registry)
+        assert result.machine.revision == 1
+        assert result.machine.name == "cpu-host"
+        assert result.fingerprint != CPU_HOST.fingerprint()
+        result.apply(registry)
+        after = telemetry.mean_abs_log_ratio(telemetry.join(runs, registry))
+        assert after < before / 4
+        assert after < 0.2
+
+    def test_refit_rejects_foreign_machine_rows(self, registry):
+        # an explicit machine with no supporting rows must not get an
+        # evidence-free revision bump
+        runs = _synthetic_runs(registry, factor=2.0, n_runs=3)
+        rows = telemetry.join(runs, registry)
+        with pytest.raises(ValueError, match="no residual rows"):
+            telemetry.refit(rows, registry, machine_name="tpu-v5e")
+
+    def test_ridge_lstsq_handles_singular_at_lam_zero(self):
+        from repro.core.fitting import ridge_lstsq
+        A = np.array([[1.0, 1.0], [1.0, 1.0]])
+        x = ridge_lstsq(A, np.array([1.0, 2.0]), lam=0.0)
+        assert np.all(np.isfinite(x))          # least-norm, not LinAlgError
+        x1 = ridge_lstsq(np.ones((4, 1)), np.full(4, 2.0), lam=0.0)
+        assert x1[0] == pytest.approx(2.0)
+        shrunk = ridge_lstsq(np.ones((4, 1)), np.full(4, 2.0), lam=4.0)
+        assert 0.0 < shrunk[0] < 2.0           # ridge shrinks toward zero
+
+    def test_refit_emits_revision_not_mutation(self, registry):
+        frozen = registry.machine("cpu-host").machine
+        runs = _synthetic_runs(registry, factor=2.0, n_runs=4, n=8192, p=16)
+        result = telemetry.refit(telemetry.join(runs, registry), registry)
+        # nothing registered yet, and the original Machine is untouched
+        assert registry.machine("cpu-host").machine is frozen
+        assert frozen.revision == 0
+        result.apply(registry)
+        assert registry.machine("cpu-host").machine.revision == 1
+
+    def test_report_shapes(self, registry, tmp_path):
+        runs = _synthetic_runs(registry, factor=2.0, n_runs=4)
+        report = telemetry.accuracy_report(telemetry.join(runs, registry))
+        assert report["ops"]["summa"]["n_rows"] == 4
+        assert report["overall"]["mean_rel_err"] == pytest.approx(0.5)
+        text = telemetry.format_report(report)
+        assert "summa" in text and "overall" in text
+        path = telemetry.save_report(report, str(tmp_path / "report.json"))
+        with open(path) as f:
+            assert json.load(f)["overall"]["n_rows"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Drift
+# ---------------------------------------------------------------------------
+
+
+def _rows_with_err(op, rel_errs, t0=0.0):
+    return [Residual(op=op, variant="2d", n=64, p=1, c=1, phase="execute",
+                     measured=1.0, predicted=1.0 + e, machine="cpu-host",
+                     timestamp=t0 + i)
+            for i, e in enumerate(rel_errs)]
+
+
+class TestDrift:
+    def test_rolling_window_and_threshold(self):
+        rows = _rows_with_err("summa", [0.1] * 20 + [1.5] * 10)
+        st = telemetry.check(rows, threshold=0.75, window=10)["summa"]
+        assert st.rolling_mean_rel_err == pytest.approx(1.5)
+        assert st.drifted
+        healthy = telemetry.check(rows, threshold=0.75, window=30)["summa"]
+        assert not healthy.drifted  # old good runs dilute the window
+
+    def test_too_few_rows_is_not_drift(self):
+        st = telemetry.check(_rows_with_err("summa", [2.0, 2.0]),
+                             threshold=0.5, window=10)["summa"]
+        assert st.n_rows == 2 and not st.drifted
+
+    def test_bump_revision_changes_fingerprint_only(self, registry):
+        before = registry.machine("cpu-host")
+        m = telemetry.bump_revision(registry, "cpu-host")
+        assert m.revision == 1
+        assert m.fingerprint() != before.machine.fingerprint()
+        after = registry.machine("cpu-host")
+        assert after.efficiency is before.efficiency
+        assert after.calibration is before.calibration
+
+    def test_detect_and_invalidate(self, registry):
+        ok = _rows_with_err("summa", [0.05] * 10)
+        assert telemetry.detect_and_invalidate(ok, registry, "cpu-host") \
+            is None
+        bad = _rows_with_err("summa", [2.0] * 10)
+        m = telemetry.detect_and_invalidate(bad, registry, "cpu-host")
+        assert m is not None and m.revision == 1
+
+
+# ---------------------------------------------------------------------------
+# The closed loop (acceptance): real runs -> join -> refit -> drift ->
+# stale plan ignored
+# ---------------------------------------------------------------------------
+
+
+class TestClosedLoop:
+    def test_record_join_refit_drift_invalidate(self, tmp_path):
+        import jax
+        from repro.tuner import dispatch
+
+        registry = build_default_registry()
+        store = telemetry.enable(RunStore(str(tmp_path / "telemetry")))
+        tuner = Tuner(registry=registry,
+                      cache=PlanCache(str(tmp_path / "plans")))
+        rng = np.random.default_rng(0)
+        sizes = (64, 96, 128)
+        mats = {n: rng.standard_normal((n, n)).astype("float32")
+                for n in sizes}
+        for n in sizes:                       # compile outside the records
+            dispatch.matmul(mats[n], mats[n], tuner=tuner)
+        store_runs0 = len(store.load())
+        for _ in range(7):
+            for n in sizes:
+                dispatch.matmul(mats[n], mats[n], tuner=tuner)
+        runs = store.load()
+        assert len(runs) - store_runs0 >= 20  # >= 20 recorded CPU_HOST runs
+        assert all(r.machine == "cpu-host" for r in runs)
+        assert all("execute" in r.phases for r in runs if r.kind == "dispatch")
+
+        # -- residual join produces per-phase ratios -------------------------
+        rows = telemetry.join(runs, registry)
+        assert len(rows) >= 20
+        assert all(r.ratio > 0 for r in rows)
+        before = telemetry.mean_abs_log_ratio(rows)
+
+        # -- refit shrinks the error vs the un-refit model -------------------
+        result = telemetry.refit(rows, registry)
+        result.apply(registry)
+        after = telemetry.mean_abs_log_ratio(telemetry.join(runs, registry))
+        assert after < before
+
+        # -- injected slowdown (scaled sleep in the phase) drifts ------------
+        fp_before = tuner.plan("matmul", 64, device_count=1, platform="cpu",
+                               device_kind="cl-test").fingerprint
+        evals_before = tuner.stats["model_evals"]
+        slow_runs = []
+        for _ in range(8):
+            plan = tuner.plan("matmul", 64, device_count=1, platform="cpu",
+                              device_kind="cl-test")
+            pt = telemetry.timer_for_plan(plan)
+            with pt.phase("execute"):
+                jax.block_until_ready(
+                    dispatch.execute(plan, mats[64], mats[64]))
+                time.sleep(0.02)              # the injected slowdown
+            slow_runs.append(pt.emit(force=True))
+        slow_rows = telemetry.join(slow_runs, registry)
+        status = telemetry.check(slow_rows, threshold=0.5, window=8)
+        assert status["summa"].drifted
+
+        new_machine = telemetry.detect_and_invalidate(
+            slow_rows, registry, "cpu-host", threshold=0.5, window=8)
+        assert new_machine is not None
+
+        # -- the stale cached plan is provably ignored -----------------------
+        assert tuner.stats["model_evals"] == evals_before  # all cache hits
+        replanned = tuner.plan("matmul", 64, device_count=1, platform="cpu",
+                               device_kind="cl-test")
+        assert tuner.stats["model_evals"] == evals_before + 1  # re-planned
+        assert replanned.fingerprint != fp_before
+
+
+# ---------------------------------------------------------------------------
+# Tuner.plan(observe=True) and the serving engine's recording
+# ---------------------------------------------------------------------------
+
+
+class TestWiring:
+    def test_plan_observe_records_without_global_switch(self, registry,
+                                                        tmp_path):
+        store = RunStore(str(tmp_path))
+        t = Tuner(registry=registry, cache=PlanCache(str(tmp_path / "p")),
+                  store=store)
+        assert not telemetry.enabled()
+        plan = t.plan("matmul", 128, device_count=4, platform="cpu",
+                      device_kind="k", observe=True)
+        t.plan("matmul", 128, device_count=4, platform="cpu",
+               device_kind="k", observe=True)     # cache hit also records
+        recs = store.load()
+        assert len(recs) == 2
+        assert all(r.kind == "plan" and not r.phases for r in recs)
+        assert recs[0].predicted == plan.predicted
+        assert t.stats["observed"] == 2
+
+    def test_observed_dispatch_lands_in_tuner_store(self, tmp_path):
+        # the plan promise and the measured run must end up in the SAME
+        # store, or join() can never pair them
+        from repro.tuner import dispatch
+        store = RunStore(str(tmp_path / "t"))
+        t = Tuner(registry=build_default_registry(),
+                  cache=PlanCache(str(tmp_path / "p")), store=store)
+        assert not telemetry.enabled()
+        a = np.random.default_rng(0).standard_normal((32, 32)) \
+            .astype("float32")
+        dispatch.matmul(a, a, tuner=t, observe=True)
+        kinds = sorted(r.kind for r in store.load())
+        assert kinds == ["dispatch", "plan"]
+
+    def test_engine_records_prefill_and_decode(self, tmp_path):
+        import jax.numpy as jnp
+        from repro.configs import get
+        from repro.models import build_model
+        from repro.serving import Engine, ServeConfig
+        import jax
+
+        store = telemetry.enable(RunStore(str(tmp_path)))
+        cfg = get("qwen1.5-4b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params, ServeConfig(max_new_tokens=3,
+                                                max_cache_len=32))
+        eng.generate(jnp.asarray([[1, 2, 3, 4]], jnp.int32))
+        [rec] = [r for r in store.load() if r.kind == "serve"]
+        assert rec.op == "serve" and rec.n == 4
+        assert set(rec.phases) == {"prefill", "decode"}
+        assert all(v > 0 for v in rec.phases.values())

@@ -165,6 +165,61 @@ class TestPlanning:
         assert Tuner.prefill_chunk(t, 4096) == 128
 
 
+class TestPlanInvalidation:
+    """Every way a cached plan can go stale must read as a miss."""
+
+    KW = dict(device_count=8, platform="cpu", device_kind="test-cpu")
+
+    def _plan_and_mutate(self, tmp_path, field, value):
+        t = Tuner(cache=PlanCache(str(tmp_path)))
+        t.plan("matmul", 4096, **self.KW)
+        path = tmp_path / os.listdir(tmp_path)[0]
+        payload = json.loads(path.read_text())
+        payload[field] = value
+        path.write_text(json.dumps(payload))
+        t2 = Tuner(cache=PlanCache(str(tmp_path)))
+        t2.plan("matmul", 4096, **self.KW)
+        return t2
+
+    def _assert_replanned_and_repaired(self, t2, tmp_path):
+        assert t2.stats["model_evals"] == 1      # stale entry read as a miss
+        t3 = Tuner(cache=PlanCache(str(tmp_path)))
+        t3.plan("matmul", 4096, **self.KW)       # replan rewrote a valid entry
+        assert t3.stats["model_evals"] == 0 and t3.cache.disk_hits == 1
+
+    def test_model_version_mismatch_replans(self, tmp_path):
+        t2 = self._plan_and_mutate(tmp_path, "model_version", "ir-0-ancient")
+        self._assert_replanned_and_repaired(t2, tmp_path)
+
+    def test_plan_schema_bump_replans(self, tmp_path):
+        from repro.tuner.plan import PLAN_SCHEMA
+        t2 = self._plan_and_mutate(tmp_path, "schema", PLAN_SCHEMA + 1)
+        self._assert_replanned_and_repaired(t2, tmp_path)
+
+    def test_current_schema_is_a_hit(self, tmp_path):
+        # control: untouched payload round-trips as a disk hit
+        t = Tuner(cache=PlanCache(str(tmp_path)))
+        t.plan("matmul", 4096, **self.KW)
+        t2 = Tuner(cache=PlanCache(str(tmp_path)))
+        t2.plan("matmul", 4096, **self.KW)
+        assert t2.stats["model_evals"] == 0 and t2.cache.disk_hits == 1
+
+    def test_drift_revision_bump_replans(self, tmp_path):
+        from repro.tuner import build_default_registry
+        from repro import telemetry
+        reg = build_default_registry()
+        t = Tuner(registry=reg, cache=PlanCache(str(tmp_path)))
+        p1 = t.plan("matmul", 4096, **self.KW)
+        t.plan("matmul", 4096, **self.KW)
+        assert t.stats == {"model_evals": 1, "cache_hits": 1}
+        telemetry.bump_revision(reg, "cpu-host")
+        p2 = t.plan("matmul", 4096, **self.KW)
+        assert t.stats["model_evals"] == 2       # stale plan never recalled
+        assert p2.fingerprint != p1.fingerprint
+        # the old entry is orphaned on disk, not misread
+        assert len(os.listdir(tmp_path)) == 2
+
+
 @pytest.fixture(scope="module")
 def verdicts():
     env = dict(os.environ)
