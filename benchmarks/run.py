@@ -145,6 +145,20 @@ def bench_sim():
          f"max_rel_err_nocal={res['max_rel_err_nocal']:.1e}")
 
 
+def bench_sim_scale():
+    t0 = time.perf_counter()
+    from benchmarks.bench_sim_scale import main as sim_scale
+    res = sim_scale()
+    _save("BENCH_sim_scale", res)
+    emit("sim_scale", (time.perf_counter() - t0) * 1e6,
+         f"p256={res['events_per_sec_p256']:.2e}ev/s "
+         f"({res['throughput_vs_pr3_baseline']:.0f}x PR-3 baseline, "
+         f"{res['speedup_vs_reference_p256']:.1f}x reference) "
+         f"p4096={res['wall_p4096_s']:.2f}s "
+         f"p24576={res['wall_p24576_s']:.2f}s "
+         f"agree={res['max_rel_err_vs_reference']:.1e}")
+
+
 def bench_telemetry():
     t0 = time.perf_counter()
     from benchmarks.bench_telemetry import main as tele
@@ -190,6 +204,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "tuner": bench_tuner,
     "sim": bench_sim,
+    "sim_scale": bench_sim_scale,
     "telemetry": bench_telemetry,
 }
 

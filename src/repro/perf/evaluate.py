@@ -17,6 +17,7 @@ are evaluation *options*, not rebuilt contexts:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -317,26 +318,37 @@ class CollectiveStep:
 
 
 def collective_schedule(kind: str, q: float, w: float,
-                        d: float = 1.0) -> List[CollectiveStep]:
+                        d: float = 1.0) -> Tuple[CollectiveStep, ...]:
     """Expand a collective's schedule for one scalar scenario — the
-    step-level view used by the traffic-conservation property tests.
+    step-level view used by the traffic-conservation property tests and
+    the per-rank simulator.
 
     The per-step (words, dist, sync) match ``_collective_time`` exactly.
+    Expansions are memoized on ``(kind, q, w, d)`` (hence the immutable
+    tuple): the same collective step recurs across every iteration of a
+    ``Loop`` body and across every shortlist candidate the tuner
+    simulates.
     """
+    return _collective_schedule(kind, float(q), float(w), float(d))
+
+
+@functools.lru_cache(maxsize=4096)
+def _collective_schedule(kind: str, q: float, w: float,
+                         d: float) -> Tuple[CollectiveStep, ...]:
     if kind == "reduce":
-        return (collective_schedule("redsca_sync", q, w, d)
-                + collective_schedule("gather", q, w, d))
+        return (_collective_schedule("redsca_sync", q, w, d)
+                + _collective_schedule("gather", q, w, d))
     if kind == "bcast":
-        return ([dataclasses.replace(st, phase="scatter")
-                 for st in collective_schedule("scatter_sync", q, w, d)]
-                + [dataclasses.replace(st, phase="allgather")
-                   for st in collective_schedule("allgather", q, w, d)])
+        return (tuple(dataclasses.replace(st, phase="scatter")
+                      for st in _collective_schedule("scatter_sync", q, w, d))
+                + tuple(dataclasses.replace(st, phase="allgather")
+                        for st in _collective_schedule("allgather", q, w, d)))
     if kind == "bcast_sync":
-        return ([dataclasses.replace(st, phase="scatter")
-                 for st in collective_schedule("scatter_sync", q, w, d)]
-                + collective_schedule("allgather_sync", q, w, d))
+        return (tuple(dataclasses.replace(st, phase="scatter")
+                      for st in _collective_schedule("scatter_sync", q, w, d))
+                + _collective_schedule("allgather_sync", q, w, d))
     if q <= 1:
-        return []
+        return ()
     s = int(_steps_of(q))
     out: List[CollectiveStep] = []
     if kind in ("redsca_sync", "scatter_sync"):
@@ -345,12 +357,12 @@ def collective_schedule(kind: str, q: float, w: float,
             out.append(CollectiveStep(phase, w / 2 ** (i + 1), (2 ** i) * d,
                                       False))
         out.append(CollectiveStep(phase, w / 2 ** s, (2 ** (s - 1)) * d, True))
-        return out
+        return tuple(out)
     if kind in ("gather", "allgather", "allgather_sync"):
         phase = "gather" if kind == "gather" else "allgather"
         for i in range(s):
             sync = kind == "allgather_sync" and i == s - 1
             out.append(CollectiveStep(phase, (w / q) * 2 ** i, (2 ** i) * d,
                                       sync))
-        return out
+        return tuple(out)
     raise ValueError(f"unknown collective kind {kind!r}")

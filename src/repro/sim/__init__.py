@@ -7,13 +7,21 @@ contention into one calibrated scalar per phase; this package replays the
 contention emerges from where traffic actually collides:
 
   topology.py   Torus (k-ary n-cube, dimension-ordered routing) and the
-                contention-free Crossbar baseline; ``topology_for`` sizes
-                a torus for a machine
+                contention-free Crossbar baseline; CSR ``ShiftPlan``
+                link-incidence arrays per shift pattern; ``topology_for``
+                sizes (and memoizes) a torus for a machine
+  fold.py       rank-symmetry folding: color refinement finds the
+                coarsest equitable partition of a pattern, so one
+                representative transfer per class is simulated with
+                multiplicity-weighted link loads (exact; DESIGN.md §7)
   network.py    the fluid max-rate link engine: a transfer's rate is
-                1 / (beta * max instantaneous load over its links)
+                1 / (beta * max instantaneous load over its links);
+                folded sparse event loop, plus the PR-3 per-transfer
+                loop as ``engine="reference"`` (the agreement oracle)
   executor.py   ``simulate_program``: walks an IR program per rank —
                 collectives expand step-by-step, Overlap branches race,
-                Loop/ramp forms unroll
+                Loop/ramp forms unroll; ``simulate_programs`` batches
+                scenarios over shared route/fold caches
   result.py     ``SimResult`` (per-rank phases, critical path, link
                 utilization, overlap efficiency) + Chrome-trace emission
                 under ``artifacts/traces/``
@@ -28,17 +36,21 @@ uses it as an opt-in second planning stage: ``Tuner.plan(...,
 refine="sim")`` re-ranks the closed-form shortlist by simulated time.
 """
 
-from .topology import Crossbar, Topology, Torus, topology_for
+from .topology import Crossbar, ShiftPlan, Topology, Torus, topology_for
+from .fold import Fold, build_fold, refine_partition, trivial_fold
 from .network import LinkStats, Network, Transfer
-from .executor import MAX_UNROLL, ProgramSimulator, simulate_program
+from .executor import (MAX_UNROLL, ProgramSimulator, simulate_program,
+                       simulate_programs)
 from .result import RankPhase, SimResult, traces_dir
 from .calibrate import (derive_calibration, hopper_like_topology,
                         shift_factors, v5e_pod_topology)
 
 __all__ = [
-    "Crossbar", "Topology", "Torus", "topology_for",
+    "Crossbar", "ShiftPlan", "Topology", "Torus", "topology_for",
+    "Fold", "build_fold", "refine_partition", "trivial_fold",
     "LinkStats", "Network", "Transfer",
     "MAX_UNROLL", "ProgramSimulator", "simulate_program",
+    "simulate_programs",
     "RankPhase", "SimResult", "traces_dir",
     "derive_calibration", "hopper_like_topology", "shift_factors",
     "v5e_pod_topology",

@@ -47,9 +47,9 @@ from ..core.perfmodel import ROUTINE_FLOPS
 from ..perf import collective_schedule
 from ..perf.ir import (Collective, Compute, Loop, Node, Overlap, P2P, Program,
                        Seq, SyncP2P)
-from .network import Network, Transfer
+from .network import Network
 from .result import RankPhase, SimResult
-from .topology import Topology
+from .topology import Topology, topology_for
 
 #: hard ceiling on unrolled iterations of a single Loop/Overlap node —
 #: a guard rail against accidentally simulating a million-step program,
@@ -61,7 +61,8 @@ class ProgramSimulator:
     """One simulation of ``program`` for a scalar scenario on a topology."""
 
     def __init__(self, program: Program, ctx, topology: Topology,
-                 n: float, p: int, c: float = 1, r: float = 1):
+                 n: float, p: int, c: float = 1, r: float = 1,
+                 *, fold: bool = True, engine: str = "vector"):
         p = int(p)
         if p < 1:
             raise ValueError(f"need p >= 1, got {p}")
@@ -78,7 +79,8 @@ class ProgramSimulator:
         self.efficiency = ctx.comp.efficiency
         self.latency = ctx.comm.machine.latency
         self.beta = ctx.comm.machine.inv_bandwidth
-        self.net = Network(topology, self.latency, self.beta)
+        self.net = Network(topology, self.latency, self.beta,
+                           fold=fold, engine=engine)
         self.compute_events = 0
         self.phases: Dict[str, RankPhase] = {}
 
@@ -108,12 +110,13 @@ class ProgramSimulator:
         if d == 0:
             # local copy (or p == 1): ideal time, never contended
             done = clocks + (lat + self.beta * w)
-            self.net.events += p
+            self.net.events += 2 * p
             return done, done - clocks
-        transfers = [Transfer(rk, (rk + d) % p, w, float(clocks[rk]), lat)
-                     for rk in range(p)]
-        done = self.net.deliver(transfers)
-        new = np.maximum(done, np.roll(done, d))  # roll(done,d)[r]=done[r-d]
+        done = self.net.deliver_shift(clocks, w, d, lat)
+        rolled = np.empty_like(done)  # roll(done, d)[r] = done[r - d]
+        rolled[:d] = done[p - d:]
+        rolled[d:] = done[:p - d]
+        new = np.maximum(done, rolled)
         return new, new - clocks
 
     # -- walk ----------------------------------------------------------------
@@ -313,14 +316,72 @@ class ProgramSimulator:
             total=float(clocks.max()), per_rank=clocks,
             comm=tot_cm, comp=tot_cp, phases=self.phases,
             link_stats=self.net.stats,
-            events=self.net.events + self.compute_events)
+            events=self.net.events + self.compute_events,
+            engine=self.net.engine)
 
 
 def simulate_program(program: Program, ctx, topology: Topology,
-                     n: float, p: int, c: float = 1, r: float = 1
+                     n: float, p: int, c: float = 1, r: float = 1,
+                     *, fold: bool = True, engine: str = "vector"
                      ) -> SimResult:
     """Simulate one scalar scenario of ``program`` on ``topology`` using
     the machine surfaces of ``ctx`` (the same ``AlgoContext`` the
     closed-form evaluator takes).  Ranks 0..p-1 map to topology nodes
-    0..p-1."""
-    return ProgramSimulator(program, ctx, topology, n, p, c, r).run()
+    0..p-1.
+
+    ``fold=False`` opts out of rank-symmetry folding (still the
+    vectorized sparse engine) for traffic the class detector cannot lump;
+    ``engine="reference"`` replays through the PR-3 per-transfer event
+    loop — the agreement oracle the CI gate compares against."""
+    return ProgramSimulator(program, ctx, topology, n, p, c, r,
+                            fold=fold, engine=engine).run()
+
+
+def simulate_programs(programs, ctx, scenarios, *, topology=None,
+                      machine=None, fold: bool = True,
+                      engine: str = "vector", strict: bool = True):
+    """Batch simulation: replay ``programs`` over ``scenarios`` in one
+    call, sharing every route/fold cache across runs.
+
+    ``programs`` is one :class:`~repro.perf.ir.Program` (broadcast over
+    all scenarios) or a sequence zipped 1:1 with ``scenarios``; each
+    scenario is a ``{"n": ..., "p": ..., "c": ..., "r": ...}`` mapping
+    (``c``/``r`` default to 1).  ``topology`` pins one explicit topology
+    for every run; otherwise each run gets ``topology_for(machine, p)``
+    — memoized, so same-``p`` candidates share one instance and its
+    caches.  ``strict=False`` turns per-run failures into ``None``
+    entries instead of raising (the telemetry join uses this: one bad
+    scenario must not sink the batch).
+
+    This is the tuner's shortlist re-rank and telemetry's ``include_sim``
+    entry point: the expensive artifacts — CSR link-incidence plans and
+    symmetry folds — are keyed on the topology instance, so simulating k
+    candidates costs one route construction, not k.
+    """
+    if topology is None and machine is None:
+        raise ValueError("pass topology= or machine= (a machine profile "
+                         "with torus_dims); otherwise every scenario would "
+                         "silently simulate contention-free")
+    scenarios = list(scenarios)
+    if isinstance(programs, Program):
+        programs = [programs] * len(scenarios)
+    else:
+        programs = list(programs)
+        if len(programs) != len(scenarios):
+            raise ValueError(f"{len(programs)} programs vs "
+                             f"{len(scenarios)} scenarios")
+    results = []
+    for prog, scen in zip(programs, scenarios):
+        try:
+            p = int(scen["p"])
+            topo = topology if topology is not None \
+                else topology_for(machine, p)
+            results.append(ProgramSimulator(
+                prog, ctx, topo, float(scen["n"]), p,
+                float(scen.get("c", 1)), float(scen.get("r", 1)),
+                fold=fold, engine=engine).run())
+        except Exception:
+            if strict:
+                raise
+            results.append(None)
+    return results

@@ -56,6 +56,7 @@ class SimResult:
     phases: Dict[str, RankPhase]    # insertion-ordered top-level phases
     link_stats: LinkStats
     events: int
+    engine: str = "vector"          # "vector" (folded sparse) | "reference"
 
     @property
     def critical_rank(self) -> int:
@@ -92,6 +93,7 @@ class SimResult:
             "critical_rank": self.critical_rank,
             "overlap_efficiency": self.overlap_efficiency,
             "events": int(self.events),
+            "engine": self.engine,
             "link_utilization": self.utilization_histogram(),
         }
 

@@ -76,10 +76,16 @@ def join(runs: Sequence[RunRecord], registry=None, *,
     machine is unknown to the registry, or whose phases are all overhead
     (no model analog) contribute nothing — serving records join only
     if an LM program is registered under their op.
+
+    ``include_sim=True`` replays every distinct joinable scenario through
+    the per-rank simulator in one ``simulate_programs`` batch per machine
+    (shared route/fold caches), before the row assembly below.
     """
     registry = registry or _default_registry()
     rows: List[Residual] = []
     eval_cache: Dict[tuple, object] = {}
+    if include_sim:
+        _batch_sim_totals(runs, registry, eval_cache)
     for run in runs:
         if not run.phases:
             continue
@@ -125,20 +131,51 @@ def join(runs: Sequence[RunRecord], registry=None, *,
     return rows
 
 
+def _sim_key(run: RunRecord) -> tuple:
+    return ("sim", run.machine, run.op, run.variant, run.n, run.p, run.c)
+
+
+def _batch_sim_totals(runs: Sequence[RunRecord], registry,
+                      cache: Dict[tuple, object]) -> None:
+    """Pre-fill ``cache`` with simulated totals for every distinct
+    joinable (machine, op, variant, n, p, c) among ``runs`` — one
+    ``simulate_programs`` call per machine, failures cached as None."""
+    from ..sim import simulate_programs
+    by_machine: Dict[str, List[tuple]] = {}
+    for run in runs:
+        key = _sim_key(run)
+        if key in cache or not run.phases:
+            continue
+        if not registry.has_program(run.op, run.variant):
+            continue
+        try:
+            registry.machine(run.machine)
+        except KeyError:
+            continue
+        cache[key] = None  # dedup marker; overwritten on success
+        by_machine.setdefault(run.machine, []).append(key)
+    for machine, keys in by_machine.items():
+        surface = registry.machine(machine)
+        programs = [registry.program(k[2], k[3]) for k in keys]
+        scens = [{"n": float(k[4]), "p": int(k[5]), "c": int(k[6]), "r": 1}
+                 for k in keys]
+        sims = simulate_programs(programs, surface.context(), scens,
+                                 machine=surface.machine, strict=False)
+        for key, sim in zip(keys, sims):
+            cache[key] = float(sim.total) if sim is not None else None
+
+
 def _sim_total(registry, surface, run: RunRecord,
                cache: Dict[tuple, object]) -> Optional[float]:
-    key = ("sim", run.machine, run.op, run.variant, run.n, run.p, run.c)
+    key = _sim_key(run)
     if key in cache:
         return cache[key]
-    from ..sim import simulate_program, topology_for
-    try:
-        sim = simulate_program(registry.program(run.op, run.variant),
-                               surface.context(),
-                               topology_for(surface.machine, run.p),
-                               float(run.n), int(run.p), int(run.c), 1)
-        total = float(sim.total)
-    except Exception:
-        total = None
+    from ..sim import simulate_programs
+    sims = simulate_programs(
+        [registry.program(run.op, run.variant)], surface.context(),
+        [{"n": float(run.n), "p": int(run.p), "c": int(run.c), "r": 1}],
+        machine=surface.machine, strict=False)
+    total = float(sims[0].total) if sims[0] is not None else None
     cache[key] = total
     return total
 

@@ -270,26 +270,32 @@ class Tuner:
         """The opt-in second planning stage: replay the closed-form top-k
         candidates through the per-rank discrete-event simulator on the
         machine's topology and pick the one with the smallest *simulated*
-        makespan.  Returns (winning candidate index, predicted-dict
-        extras)."""
-        from ..sim import simulate_program, topology_for
+        makespan.  The whole shortlist goes through one
+        ``simulate_programs`` batch so candidates at the same ``p`` share
+        route/fold caches.  Returns (winning candidate index,
+        predicted-dict extras)."""
+        from ..sim import simulate_programs
         surface = self.registry.machine(machine)
         ctx = surface.context()
         order = np.argsort(totals)[:max(1, int(shortlist))]
+        picked = [int(j) for j in order
+                  if self.registry.has_program(*cands[int(j)][:2])]
+        # legacy scalar models cannot be simulated; they drop out here
+        programs = [self.registry.program(*cands[j][:2]) for j in picked]
+        scens = [{"n": float(n), "p": cands[j][2], "c": cands[j][3], "r": 1}
+                 for j in picked]
+        sims = simulate_programs(programs, ctx, scens,
+                                 machine=surface.machine)
+        with self._lock:
+            self.stats["sim_evals"] = self.stats.get("sim_evals", 0) \
+                + len(sims)
         best_j, best_t = int(order[0]), float("inf")
         extras: Dict[str, float] = {}
-        for j in order:
-            algo, variant, p, c, _g = cands[int(j)]
-            if not self.registry.has_program(algo, variant):
-                continue  # legacy scalar models cannot be simulated
-            sim = simulate_program(self.registry.program(algo, variant), ctx,
-                                   topology_for(surface.machine, p),
-                                   float(n), p, c, 1)
+        for j, sim in zip(picked, sims):
+            algo, variant, p, c, _g = cands[j]
             extras[f"sim/{algo}/{variant}@p{p}c{c}"] = float(sim.total)
-            with self._lock:
-                self.stats["sim_evals"] = self.stats.get("sim_evals", 0) + 1
             if sim.total < best_t:
-                best_j, best_t = int(j), float(sim.total)
+                best_j, best_t = j, float(sim.total)
         if np.isfinite(best_t):
             extras["sim_total"] = best_t
         return best_j, extras

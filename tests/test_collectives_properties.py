@@ -81,7 +81,13 @@ class TestTrafficConservation:
 
     def test_degenerate_group_is_empty(self):
         for kind in ("reduce", "bcast", "bcast_sync"):
-            assert collective_schedule(kind, 1, 1e6) == []
+            assert collective_schedule(kind, 1, 1e6) == ()
+
+    def test_schedule_expansion_is_memoized(self):
+        a = collective_schedule("bcast", 16, 1e6, 2.0)
+        b = collective_schedule("bcast", 16, 1e6, 2.0)
+        assert a is b  # lru_cache returns the same immutable tuple
+        assert isinstance(a, tuple)
 
 
 class TestMonotonicity:

@@ -10,8 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.perf import EvalOptions, PROGRAMS, evaluate_program
 from repro.sim import (Crossbar, Network, Torus, Transfer, derive_calibration,
-                       shift_factors, simulate_program, topology_for,
-                       v5e_pod_topology)
+                       shift_factors, simulate_program, simulate_programs,
+                       topology_for, v5e_pod_topology)
 from repro.tuner import DEFAULT_REGISTRY, Tuner
 
 
@@ -64,6 +64,30 @@ class TestTopology:
         assert topology_for(TPU_V5E, 256).shape == (16, 16)
         assert topology_for(HOPPER, 4096).shape == (16, 16, 16)
         assert topology_for(CPU_HOST, 8).shape == (8,)
+
+    def test_topology_for_exact_factorization_and_memoization(self):
+        from repro.core.machine import HOPPER, TPU_V5E
+        # 24576 = 24*32*32: every rank owns a node (full fold symmetry)
+        assert topology_for(HOPPER, 24576).shape == (24, 32, 32)
+        assert topology_for(TPU_V5E, 24576).shape == (128, 192)
+        # badly skewed exact factorizations fall back to the ceiling cube
+        assert topology_for(HOPPER, 4097).shape == (17, 17, 17)
+        # instances are memoized so batched runs share route/fold caches
+        assert topology_for(HOPPER, 24576) is topology_for(HOPPER, 24576)
+
+    @pytest.mark.parametrize("shape,p,d", [
+        ((4, 8), 32, 3), ((4, 8), 32, 17), ((3, 5, 7), 105, 11),
+        ((16, 16), 256, 16), ((4, 4), 13, 5),  # p < n_nodes too
+    ])
+    def test_vectorized_shift_routes_match_per_pair_routing(self, shape, p, d):
+        """The closed-form CSR construction must be bit-identical to the
+        legacy per-pair DOR walk, including mod-p wraparound ranks."""
+        topo = Torus(shape)
+        plan = topo.shift_plan(p, d)
+        fresh = Torus(shape)  # route() below must not read the plan cache
+        for rk in range(p):
+            got = tuple(plan.links[plan.indptr[rk]:plan.indptr[rk + 1]])
+            assert got == fresh.route(rk, (rk + d) % p)
 
 
 # ---------------------------------------------------------------------------
@@ -308,3 +332,185 @@ class TestTunerSimRefine:
         with pytest.raises(ValueError, match="refine"):
             t.plan("matmul", 512, device_count=4, platform="cpu",
                    refine="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Rank-symmetry folding and the vectorized sparse engine
+# ---------------------------------------------------------------------------
+
+
+class TestSymmetryFolding:
+    def test_lockstep_shift_folds_to_few_classes(self):
+        """A vertex-transitive shift pattern in lockstep must collapse to
+        a handful of carry-pattern classes, not O(p)."""
+        topo = Torus((4, 8))
+        net = Network(topo, 0.0, 1e-9)
+        plan = topo.shift_plan(32, 3)
+        fold = net._shift_fold(plan, np.zeros(32))
+        assert fold.K <= 8
+        assert int(fold.mult.sum()) == 32
+        # every member of a class is interchangeable with its rep
+        assert fold.rep.shape == (fold.K,)
+        assert (fold.t_class[fold.rep] == np.arange(fold.K)).all()
+
+    @pytest.mark.parametrize("shape,p,d", [
+        ((4, 8), 32, 3), ((4, 4), 16, 5), ((3, 3, 3), 27, 7),
+        ((4, 4), 13, 4),  # p < n_nodes: boundary ranks break symmetry
+    ])
+    def test_folded_shift_matches_reference(self, shape, p, d):
+        topo = Torus(shape)
+        w = 1e6
+        for starts in (np.zeros(p), np.linspace(0.0, 1e-3, p),
+                       np.repeat([0.0, 5e-4], [p - p // 2, p // 2])):
+            nv = Network(topo, 1e-6, 1e-9)
+            nr = Network(topo, 1e-6, 1e-9, engine="reference")
+            got = nv.deliver_shift(starts.copy(), w, d, 1e-6)
+            ref = nr.deliver([Transfer(r, (r + d) % p, w, float(starts[r]),
+                                       1e-6) for r in range(p)])
+            np.testing.assert_allclose(got, ref, rtol=1e-9)
+            assert sum(nv.stats.words.values()) == pytest.approx(
+                sum(nr.stats.words.values()), rel=1e-9)
+            assert max(nv.stats.peak_load.values()) == \
+                max(nr.stats.peak_load.values())
+
+    def test_generic_deliver_folds_asymmetric_lists(self):
+        """The list-of-Transfer API runs the same folded engine; an
+        arbitrary asymmetric transfer set (mixed words, starts, self
+        sends, zero words) must match the reference loop."""
+        rng = np.random.default_rng(7)
+        topo = Torus((4, 8))
+        transfers = [Transfer(int(rng.integers(32)), int(rng.integers(32)),
+                              float(rng.choice([0.0, 1e5, 1e6])),
+                              float(rng.choice([0.0, 1e-4])), 1e-6)
+                     for _ in range(64)]
+        got = Network(topo, 1e-6, 1e-9).deliver(transfers)
+        ref = Network(topo, 1e-6, 1e-9, engine="reference").deliver(transfers)
+        np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+    def test_fold_opt_out_still_agrees(self, ctx):
+        program = PROGRAMS[("cannon", "2.5d")]
+        a = simulate_program(program, ctx, Torus((4, 4)), 8192.0, 16, 2)
+        b = simulate_program(program, ctx, Torus((4, 4)), 8192.0, 16, 2,
+                             fold=False)
+        assert b.total == pytest.approx(a.total, rel=1e-9)
+
+    @pytest.mark.parametrize("algo,variant", sorted(PROGRAMS))
+    def test_vector_engine_matches_reference_per_program(self, ctx, algo,
+                                                         variant):
+        """Every registered program, torus and crossbar: the folded engine
+        reproduces the PR-3 reference event loop to 1e-6 relative (the
+        same gate CI applies via BENCH_sim_scale.json)."""
+        program = PROGRAMS[(algo, variant)]
+        c = 2 if program.uses_c else 1
+        r = 2 if program.uses_r else 1
+        for topo_fn in (lambda: Torus((4, 4)), lambda: Crossbar(16)):
+            ref = simulate_program(program, ctx, topo_fn(), 8192.0, 16, c, r,
+                                   engine="reference")
+            got = simulate_program(program, ctx, topo_fn(), 8192.0, 16, c, r)
+            assert got.total == pytest.approx(ref.total, rel=1e-6)
+
+
+class TestBatchSimulation:
+    def test_batch_matches_individual_runs(self, ctx):
+        programs = [PROGRAMS[("summa", "2d")], PROGRAMS[("cannon", "2.5d")]]
+        scens = [{"n": 8192.0, "p": 16}, {"n": 8192.0, "p": 16, "c": 2}]
+        topo = Torus((4, 4))
+        batch = simulate_programs(programs, ctx, scens, topology=topo)
+        for prog, scen, res in zip(programs, scens, batch):
+            solo = simulate_program(prog, ctx, Torus((4, 4)), scen["n"],
+                                    scen["p"], scen.get("c", 1))
+            assert res.total == pytest.approx(solo.total, rel=1e-9)
+
+    def test_single_program_broadcasts_over_scenarios(self, ctx):
+        res = simulate_programs(PROGRAMS[("summa", "2d")], ctx,
+                                [{"n": 4096.0, "p": 16},
+                                 {"n": 8192.0, "p": 16}],
+                                topology=Torus((4, 4)))
+        assert len(res) == 2 and res[1].total > res[0].total
+
+    def test_zip_length_mismatch_raises(self, ctx):
+        with pytest.raises(ValueError, match="programs"):
+            simulate_programs([PROGRAMS[("summa", "2d")]], ctx,
+                              [{"n": 1.0, "p": 4}, {"n": 2.0, "p": 4}],
+                              topology=Torus((2, 2)))
+
+    def test_strict_false_yields_none_for_failed_scenarios(self, ctx):
+        res = simulate_programs(PROGRAMS[("summa", "2d")], ctx,
+                                [{"n": 4096.0, "p": 64},  # exceeds topology
+                                 {"n": 4096.0, "p": 16}],
+                                topology=Torus((4, 4)), strict=False)
+        assert res[0] is None and res[1] is not None
+
+    def test_machine_resolution_shares_topology(self, ctx):
+        from repro.core.machine import HOPPER
+        res = simulate_programs(PROGRAMS[("summa", "2d")], ctx,
+                                [{"n": 8192.0, "p": 16}] * 2,
+                                machine=HOPPER)
+        assert res[0].total == pytest.approx(res[1].total, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Loop steady-state fast-forward edge cases (vs fully unrolled execution)
+# ---------------------------------------------------------------------------
+
+
+class TestLoopFastForward:
+    def _unrolled(self, body, k):
+        from repro.perf import Seq
+        return Seq(("unrolled", Seq(*[body for _ in range(k)])))
+
+    def test_single_iteration_loop_equals_body(self, ctx):
+        from repro.perf import Loop, P2P, Program, Seq
+        body = Seq(P2P(1000.0, 2), P2P(500.0, 1))
+        loop = Program("toy", "l1", Seq(("x", Loop(body, 1.0))))
+        once = Program("toy", "once", Seq(("x", body)))
+        a = simulate_program(loop, ctx, Torus((4, 4)), 1024.0, 16)
+        b = simulate_program(once, ctx, Torus((4, 4)), 1024.0, 16)
+        assert a.total == pytest.approx(b.total, rel=1e-12)
+        assert a.events == b.events
+
+    @pytest.mark.parametrize("count", [0.5, 2.5, 7.25])
+    def test_fractional_closed_form_count_scales_leaf_costs(self, ctx,
+                                                            count):
+        """A fractional count runs floor(count) whole iterations plus one
+        body with every leaf scaled by the remainder — on a contention-free
+        topology that equals the closed form's linear charging exactly."""
+        from repro.perf import Loop, P2P, Program, Seq
+        prog = Program("toy", "frac",
+                       Seq(("x", Loop(P2P(1000.0, 1), count))))
+        unit = Program("toy", "unit", Seq(("x", P2P(1000.0, 1))))
+        a = simulate_program(prog, ctx, Crossbar(16), 1024.0, 16)
+        b = simulate_program(unit, ctx, Crossbar(16), 1024.0, 16)
+        assert a.total == pytest.approx(count * b.total, rel=1e-12)
+
+    def test_pure_compute_body_collapses_at_large_p(self, ctx):
+        """Communication-free loops advance every rank identically and
+        must collapse analytically — and match unrolled execution exactly
+        even at p=4096."""
+        from repro.perf import Compute, Loop, Program, Seq
+        body = Compute("dgemm", 256.0)
+        k = 9
+        loop = Program("toy", "comp", Seq(("x", Loop(body, float(k)))))
+        unrolled = Program("toy", "compu", self._unrolled(body, k))
+        topo = Torus((16, 16, 16))
+        a = simulate_program(loop, ctx, topo, 4096.0, 4096)
+        b = simulate_program(unrolled, ctx, topo, 4096.0, 4096)
+        assert a.total == pytest.approx(b.total, rel=1e-12)
+        assert np.allclose(a.per_rank, b.per_rank, rtol=1e-12)
+
+    def test_fast_forward_matches_unrolled_under_contention(self, ctx):
+        """Steady-state extrapolation on a contended torus: the folded
+        lockstep schedule repeats exactly from iteration one, so the
+        fast-forwarded loop equals full unrolling."""
+        from repro.perf import Loop, P2P, Program, Seq
+        body = P2P(250000.0, 2)
+        k = 12
+        loop = Program("toy", "ff", Seq(("x", Loop(body, float(k)))))
+        unrolled = Program("toy", "ffu", self._unrolled(body, k))
+        a = simulate_program(loop, ctx, Torus((4, 4)), 1024.0, 16)
+        b = simulate_program(unrolled, ctx, Torus((4, 4)), 1024.0, 16)
+        assert a.total == pytest.approx(b.total, rel=1e-9)
+        # the skipped iterations' traffic and events are amplified in
+        assert a.events == b.events
+        assert sum(a.link_stats.words.values()) == pytest.approx(
+            sum(b.link_stats.words.values()), rel=1e-9)
