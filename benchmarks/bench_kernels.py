@@ -1,0 +1,157 @@
+"""Kernel-tier microbenchmark: measured tile sweep -> constants refit ->
+model-guided tile choice, on the Pallas interpret path.
+
+This is the kernel-tier analogue of the paper's portable-benchmark fitting
+(and the seed source for ``Machine.kernel_constants``):
+
+1. sweep a candidate tile grid for the matmul kernel at a fixed shape,
+   timing each tile on the interpret path (the hardware this container
+   actually has);
+2. feed the measurements through the telemetry loop —
+   ``kernel_timer`` records -> ``refit_kernels`` -> a revision-bumped
+   machine whose constants reproduce the measured sweep;
+3. let the refitted :class:`~repro.perf.kernel.KernelModel` shortlist
+   near-optimal candidates (within ``SHORTLIST_SLACK`` of its fitted
+   best, the default blocks always included as the stand-down option) and
+   pick the measured-best inside the shortlist — the two-stage idiom
+   ``Tuner.plan(refine="sim")`` uses one tier up.
+
+The emitted ``tuned_over_default`` ratio (default-tile time over
+chosen-tile time, >= 1.0 by construction since the default is always a
+candidate) is CI-gated.  TRSM/Cholesky interpret timings ride along for
+the per-family baseline table.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import cholesky, matmul, trsm
+from repro.perf.kernel import KernelModel, TilePlan, heuristic_plan
+from repro.telemetry import kernel_timer, refit_kernels
+from repro.tuner.registry import build_default_registry
+
+#: matmul problem edge for the sweep (big enough that tiles differ, small
+#: enough that the interpreter sweep stays CI-sized)
+N = 512
+
+#: (bm, bn, bk) candidates — the square-ish corner of the model's candidate
+#: grid that fits an interpret-path sweep budget
+SWEEP_TILES = [
+    (128, 128, 128),
+    (128, 128, 512),
+    (256, 256, 128),
+    (256, 256, 256),
+    (256, 256, 512),   # the historical default
+    (512, 512, 512),
+]
+
+#: fitted-time slack for the model shortlist (stage two measures these)
+SHORTLIST_SLACK = 1.25
+
+MACHINE = "cpu-host"
+
+
+def _time_call(fn, *args, repeats: int = 2) -> float:
+    jax.block_until_ready(fn(*args))          # compile outside the clock
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> dict:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((N, N)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((N, N)), jnp.float32)
+    itemsize = 4
+
+    registry = build_default_registry()
+    machine0 = registry.machine(MACHINE).machine
+    model0 = KernelModel(machine0)
+
+    # -- stage 1: measured sweep, recorded through the telemetry layer -----
+    records = []
+    measured: Dict[tuple, float] = {}
+    for bm, bn, bk in SWEEP_TILES:
+        tp = TilePlan.make("matmul", bm=bm, bn=bn, bk=bk)
+        secs = _time_call(lambda x, y, t=tp: matmul(x, y, tiles=t), a, b)
+        measured[(bm, bn, bk)] = secs
+        pt = kernel_timer("matmul", (N, N, N), tp, dtype="float32",
+                          machine=MACHINE, itemsize=itemsize,
+                          predicted={"total": model0.time(
+                              "matmul", (N, N, N), tp, itemsize)})
+        pt.add("execute", secs)
+        records.append(pt.record())
+
+    # -- stage 2: refit the kernel constants from the recorded sweep -------
+    refit = refit_kernels(records, registry, MACHINE)
+    machine1 = refit.apply(registry)
+    model1 = KernelModel(machine1)
+
+    # -- stage 3: model-guided two-stage choice ----------------------------
+    fitted = {t: model1.time("matmul", (N, N, N),
+                             TilePlan.make("matmul", bm=t[0], bn=t[1],
+                                           bk=t[2]), itemsize)
+              for t in SWEEP_TILES}
+    default = heuristic_plan("matmul", (N, N, N), itemsize)
+    default_t = (default["bm"], default["bn"], default["bk"])
+    best_fit = min(fitted.values())
+    shortlist = sorted(t for t, s in fitted.items()
+                       if s <= SHORTLIST_SLACK * best_fit)
+    if default_t not in shortlist:
+        shortlist.append(default_t)       # the stand-down option always runs
+    chosen = min(shortlist, key=lambda t: measured[t])
+    ratio = measured[default_t] / measured[chosen]
+
+    rows: List[dict] = [
+        {"tile": {"bm": t[0], "bn": t[1], "bk": t[2]},
+         "measured_us": measured[t] * 1e6,
+         "fitted_us": fitted[t] * 1e6,
+         "in_shortlist": t in shortlist}
+        for t in SWEEP_TILES]
+
+    # per-family interpret baselines (the pre-existing bench table)
+    u = jnp.asarray(np.triu(rng.standard_normal((N, N))) + 40 * np.eye(N),
+                    jnp.float32)
+    spd = jnp.asarray(np.asarray(a) @ np.asarray(a).T + N * np.eye(N),
+                      jnp.float32)
+    family_us = {
+        "matmul": measured[default_t] * 1e6,
+        "trsm": _time_call(trsm, u, a) * 1e6,
+        "cholesky": _time_call(cholesky, spd) * 1e6,
+    }
+
+    kc0, kc1 = machine0.kernel_constants, machine1.kernel_constants
+    return {
+        "machine": MACHINE,
+        "n": N,
+        "itemsize": itemsize,
+        "sweep": rows,
+        "default_tile": {"bm": default_t[0], "bn": default_t[1],
+                         "bk": default_t[2]},
+        "chosen_tile": {"bm": chosen[0], "bn": chosen[1], "bk": chosen[2]},
+        "shortlist_size": len(shortlist),
+        "tuned_over_default": ratio,
+        "refit": {
+            "compute_scale": refit.compute_scale,
+            "loop_scale": refit.loop_scale,
+            "n_rows": refit.n_rows,
+            "revision": machine1.revision,
+            "overhead_factor": [kc0.overhead_factor, kc1.overhead_factor],
+            "loop_overhead": [kc0.loop_overhead, kc1.loop_overhead],
+        },
+        "family_interpret_us": family_us,
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

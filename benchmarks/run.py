@@ -172,24 +172,19 @@ def bench_telemetry():
 
 
 def bench_kernels():
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from repro.kernels import cholesky, matmul, trsm
-    rng = np.random.default_rng(0)
-    n = 512
-    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
-    u = jnp.asarray(np.triu(rng.standard_normal((n, n))) + 40 * np.eye(n),
-                    jnp.float32)
-    spd = jnp.asarray(np.asarray(a) @ np.asarray(a).T + n * np.eye(n),
-                      jnp.float32)
-    for name, fn, args in (("matmul", matmul, (a, a)),
-                           ("trsm", trsm, (u, a)),
-                           ("cholesky", cholesky, (spd,))):
-        jax.block_until_ready(fn(*args))
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        emit(f"kernel_{name}_interpret_n{n}", (time.perf_counter() - t0) * 1e6,
+    t0 = time.perf_counter()
+    from benchmarks.bench_kernels import main as kern
+    res = kern()
+    _save("BENCH_kernels", res)
+    ch, df = res["chosen_tile"], res["default_tile"]
+    emit("kernels_tile_autotune", (time.perf_counter() - t0) * 1e6,
+         f"tuned_over_default={res['tuned_over_default']:.2f}x "
+         f"chosen={ch['bm']}x{ch['bn']}x{ch['bk']} "
+         f"default={df['bm']}x{df['bn']}x{df['bk']} "
+         f"shortlist={res['shortlist_size']} "
+         f"refit_rev={res['refit']['revision']}")
+    for name, us in res["family_interpret_us"].items():
+        emit(f"kernel_{name}_interpret_n{res['n']}", us,
              "interpret-mode (CPU validation; TPU is the target)")
 
 

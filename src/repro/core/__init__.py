@@ -19,7 +19,8 @@ The cost-IR itself (nodes, symbolic scenario parameters, the vectorized
 evaluator) lives in the sibling package ``repro.perf``.
 """
 
-from .machine import CPU_HOST, HOPPER, MACHINES, TPU_V5E, Machine
+from .machine import (CPU_HOST, HOPPER, KernelConstants, MACHINES, TPU_V5E,
+                      Machine)
 from .perfmodel import (CalibrationTable, CommModel, ComputeModel,
                         EfficiencyCurve, IdentityCalibration,
                         ParametricCalibration)
@@ -28,7 +29,7 @@ from .algorithms import (ALGOS, VARIANTS, AlgoContext, ModelResult, evaluate,
 from .predictor import best_variant, prediction_table, select
 
 __all__ = [
-    "CPU_HOST", "HOPPER", "MACHINES", "TPU_V5E", "Machine",
+    "CPU_HOST", "HOPPER", "KernelConstants", "MACHINES", "TPU_V5E", "Machine",
     "CalibrationTable", "CommModel", "ComputeModel", "EfficiencyCurve",
     "IdentityCalibration", "ParametricCalibration",
     "ALGOS", "VARIANTS", "AlgoContext", "ModelResult", "evaluate",

@@ -21,6 +21,31 @@ from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelConstants:
+    """Intra-kernel phase-model constants (the WSE-2 SUMMA exemplar's
+    parameterization, adapted to Pallas grids): per-kernel time decomposes
+    into H2D streaming, issue/execute cycles inflated by a measured
+    overhead factor plus per-grid-step loop cost, and D2H write-back —
+    with H2D/D2H bandwidths kept separate because write-back gather
+    patterns are consistently slower than operand broadcast.
+
+    Seed values come from ``benchmarks/bench_kernels.py`` sweeps;
+    ``telemetry.refit_kernels`` recalibrates them from recorded per-kernel
+    phase times (revision-bumped, never in place).
+    """
+
+    fma_rate: float          # flop/s for MXU-shaped (dgemm) inner loops
+    vpu_rate: float          # flop/s for column-recurrence (VPU) work
+    bw_h2d: float            # B/s operand streaming into on-chip memory
+    bw_d2h: float            # B/s result write-back (gather side; slower)
+    c_h2d: float             # s fixed input-side setup per kernel launch
+    c_d2h: float             # s fixed output-side setup per kernel launch
+    overhead_factor: float   # >= 1 multiplier on pure issue/execute time
+    loop_overhead: float     # s per grid step (index math, task switch)
+    vmem_bytes: float        # usable on-chip bytes for one step's blocks
+
+
+@dataclasses.dataclass(frozen=True)
 class Machine:
     name: str
     # -- compute ------------------------------------------------------------
@@ -39,6 +64,8 @@ class Machine:
     # -- cross-pod (multi-pod meshes only) -----------------------------------
     dcn_bandwidth: Optional[float] = None   # per-host DCN [B/s]
     notes: str = ""
+    # -- intra-kernel tier (None: no Pallas profile -> heuristic tiles) ------
+    kernel_constants: Optional[KernelConstants] = None
     # -- profile revision ----------------------------------------------------
     # Bumped (never mutated in place) when measured-run feedback refits the
     # profile or drift detection declares the current one stale.  The
@@ -108,6 +135,16 @@ TPU_V5E = Machine(
     hbm_bandwidth=819e9,
     dcn_bandwidth=25e9,
     notes="Adaptation target (assignment constants).",
+    # Kernel-tier seeds (planning numbers, refit from telemetry): MXU at
+    # the bf16 peak, VPU two orders down; H2D streams at HBM rate while
+    # D2H write-back pays the gather-side penalty (the WSE-2 exemplar
+    # measures ~3x — we seed 2x for the TPU's memory system).
+    kernel_constants=KernelConstants(
+        fma_rate=197e12, vpu_rate=4e12,
+        bw_h2d=819e9, bw_d2h=410e9,
+        c_h2d=2e-6, c_d2h=5e-6,
+        overhead_factor=1.35, loop_overhead=1.5e-6,
+        vmem_bytes=96 * 1024 * 1024),
 )
 
 # ---------------------------------------------------------------------------
@@ -129,6 +166,16 @@ CPU_HOST = Machine(
     torus_dims=1,
     hbm_bandwidth=20e9,
     notes="Host CPU 'machine' used for live validation of the methodology.",
+    # Interpret-path seeds: the Pallas interpreter charges heavy per-grid-
+    # step overhead, which is exactly what bench_kernels measures and
+    # refit_kernels recalibrates; these fallbacks only need the right
+    # ordering (steps expensive, bandwidth cheap-ish) to rank tiles sanely.
+    kernel_constants=KernelConstants(
+        fma_rate=5e9, vpu_rate=5e8,
+        bw_h2d=8e9, bw_d2h=4e9,
+        c_h2d=2e-4, c_d2h=2e-4,
+        overhead_factor=2.0, loop_overhead=5e-4,
+        vmem_bytes=96 * 1024 * 1024),
 )
 
 MACHINES = {m.name: m for m in (HOPPER, TPU_V5E, CPU_HOST)}

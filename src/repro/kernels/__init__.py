@@ -5,6 +5,7 @@ Each kernel ships three files: the pallas_call + BlockSpec kernel, ops.py
 ref.py (pure-jnp oracle used by the allclose test sweeps).
 """
 
+from .common import TilePlan, heuristic_plan, pad_axes, round_up
 from .matmul import matmul, matmul_pallas, matmul_ref
 from .trsm import trsm, trsm_diag_pallas, trsm_ref
 from .cholesky import cholesky, cholesky_block_pallas, cholesky_ref

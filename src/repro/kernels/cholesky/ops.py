@@ -5,19 +5,31 @@ A_ij), trailing syrk update (matmul kernel)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..common import TilePlan, tile_block
 from ..matmul.ops import matmul
 from ..trsm.ops import trsm
 from .cholesky import cholesky_block_pallas
 from .ref import cholesky_ref
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block"))
-def cholesky(a: jax.Array, *, block: int = 256, interpret: bool = True) -> jax.Array:
-    """L with L L^T = A (A SPD, (n, n))."""
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block", "tiles",
+                                    "mm_tiles"))
+def cholesky(a: jax.Array, *, block: int = 256, interpret: bool = True,
+             tiles: Optional[TilePlan] = None,
+             mm_tiles: Optional[TilePlan] = None) -> jax.Array:
+    """L with L L^T = A (A SPD, (n, n)).
+
+    ``tiles`` (a cholesky :class:`TilePlan`, dim ``block``) overrides the
+    panel width (the panel trsm necessarily solves at that width);
+    ``mm_tiles`` is threaded to the dgemm-shaped trailing updates.
+    """
+    block = tile_block(tiles, "cholesky", "block", block)
     n = a.shape[0]
     if n % block != 0 or n <= block:
         if n <= block and n >= 8:
@@ -33,10 +45,11 @@ def cholesky(a: jax.Array, *, block: int = 256, interpret: bool = True) -> jax.A
         if j + 1 < nb:
             # panel: L_ij = A_ij (L_jj^T)^{-1}  =>  X U = B with U = L_jj^T
             a_panel = jax.lax.slice(acc, (jj + block, jj), (n, jj + block))
-            l_panel = trsm(ljj.T, a_panel, block=block, interpret=interpret)
+            l_panel = trsm(ljj.T, a_panel, block=block, interpret=interpret,
+                           mm_tiles=mm_tiles)
             # trailing syrk: A_trail -= L_panel @ L_panel^T
             upd = matmul(l_panel, l_panel.T, interpret=interpret,
-                         out_dtype=acc.dtype)
+                         out_dtype=acc.dtype, tiles=mm_tiles)
             trail = jax.lax.slice(acc, (jj + block, jj + block), (n, n)) - upd
             acc = jax.lax.dynamic_update_slice(acc, trail,
                                                (jj + block, jj + block))

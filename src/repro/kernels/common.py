@@ -1,0 +1,67 @@
+"""Shared wrapper plumbing for the Pallas kernel families.
+
+The per-family ``ops.py`` wrappers all did the same three things with
+copy-pasted code: round dimensions up to a block multiple, ``jnp.pad``
+operands out to the rounded shape (unconditionally, even when already
+aligned), and hard-code the block sizes.  This module centralizes the
+first two and routes the third through ``repro.perf.kernel``: a wrapper
+takes an optional :class:`TilePlan` (frozen/hashable, so it rides along
+as a jit-static argument) and falls back to the historical heuristic
+blocks when none is given.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+# the model layer is pure numpy — importing it pulls no jax machinery in
+from ..perf.kernel import (MIN_TILE, TilePlan, VMEM_BUDGET,
+                           heuristic_matmul_blocks, heuristic_plan)
+
+__all__ = [
+    "MIN_TILE", "TilePlan", "VMEM_BUDGET", "heuristic_matmul_blocks",
+    "heuristic_plan", "pad_axes", "round_up", "tile_block",
+]
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return (x + m - 1) // m * m
+
+
+def pad_axes(x: jax.Array,
+             multiples: Mapping[int, int]) -> jax.Array:
+    """Zero-pad ``x`` so every listed axis is a multiple of its block.
+
+    ``multiples`` maps axis index -> block size.  Returns ``x`` unchanged
+    (no ``jnp.pad`` issued at all) when every axis is already aligned.
+    """
+    width: list = [(0, 0)] * x.ndim
+    any_pad = False
+    for axis, m in multiples.items():
+        extent = x.shape[axis]
+        pad = round_up(extent, m) - extent
+        if pad:
+            width[axis] = (0, pad)
+            any_pad = True
+    if not any_pad:
+        return x
+    return jnp.pad(x, width)
+
+
+def tile_block(tiles: Optional[TilePlan], kernel: str, dim: str,
+               default: Union[int, Tuple[int, ...]]):
+    """Block size for ``dim`` out of a plan, or the caller's default.
+
+    Raises if the plan targets a different kernel family — a swapped
+    plan would otherwise silently run with nonsense blocks.
+    """
+    if tiles is None:
+        return default
+    if tiles.kernel != kernel:
+        raise ValueError(f"TilePlan for {tiles.kernel!r} passed to "
+                         f"{kernel!r} wrapper")
+    return tiles[dim]

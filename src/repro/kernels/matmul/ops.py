@@ -1,51 +1,55 @@
 """jit'd public wrapper for the matmul kernel: pads arbitrary shapes to
-block multiples, picks block sizes that fit VMEM, falls back to the oracle
-for tiny problems where padding would dominate."""
+block multiples, resolves block sizes from an explicit :class:`TilePlan`
+(or the VMEM-fitting heuristic when none is given), falls back to the
+oracle for tiny problems where padding would dominate."""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
+from ..common import TilePlan, VMEM_BUDGET, heuristic_matmul_blocks, pad_axes
 from .matmul import matmul_pallas
 from .ref import matmul_ref
 
-_VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom out of ~128 MB
+_VMEM_BUDGET = VMEM_BUDGET  # historical name, kept for callers/tests
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def _pick_blocks(m: int, n: int, k: int, bytes_per_el: int,
+                 vmem_budget: Optional[int] = None):
+    """Heuristic block choice (start 256x256x512, shrink to fit).  The
+    budget is overridable per call; the shrink loop bails at the 128 floor
+    instead of spinning when even the floor blocks exceed the budget."""
+    return heuristic_matmul_blocks(m, n, k, bytes_per_el,
+                                   vmem_budget=vmem_budget)
 
 
-def _pick_blocks(m: int, n: int, k: int, bytes_per_el: int):
-    bm, bn, bk = 256, 256, 512
-    while (bm * bk + bk * bn) * bytes_per_el + bm * bn * 4 > _VMEM_BUDGET:
-        bk = max(128, bk // 2)
-        if (bm * bk + bk * bn) * bytes_per_el + bm * bn * 4 <= _VMEM_BUDGET:
-            break
-        bm, bn = max(128, bm // 2), max(128, bn // 2)
-    return bm, bn, bk
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "out_dtype", "tiles"))
 def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = True,
-           out_dtype=None) -> jax.Array:
+           out_dtype=None, tiles: Optional[TilePlan] = None) -> jax.Array:
     """C = A @ B for any (M, K) x (K, N).
 
     ``interpret=True`` (the default here) runs the kernel body in the Pallas
     interpreter — the CPU-validation mode; on TPU pass interpret=False.
+    ``tiles`` is a matmul :class:`TilePlan` (dims bm/bn/bk); omitted, the
+    historical heuristic blocks are used.
     """
     m, k = a.shape
     _, n = b.shape
     out_dtype = out_dtype or a.dtype
     if min(m, n, k) < 128:
         return matmul_ref(a, b, out_dtype=out_dtype)
-    bm, bn, bk = _pick_blocks(m, n, k, a.dtype.itemsize)
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
-    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
-    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    if tiles is not None:
+        if tiles.kernel != "matmul":
+            raise ValueError(f"TilePlan for {tiles.kernel!r} passed to matmul")
+        bm, bn, bk = tiles["bm"], tiles["bn"], tiles["bk"]
+    else:
+        bm, bn, bk = _pick_blocks(m, n, k, a.dtype.itemsize)
+    ap = pad_axes(a, {0: bm, 1: bk})
+    bp = pad_axes(b, {0: bk, 1: bn})
     out = matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret,
                         out_dtype=out_dtype)
     return out[:m, :n]

@@ -4,19 +4,29 @@ matmul kernel: all O(n^3) off-diagonal work is dgemm-shaped."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..common import TilePlan, tile_block
 from ..matmul.ops import matmul
 from .ref import trsm_ref
 from .trsm import trsm_diag_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block", "tiles",
+                                    "mm_tiles"))
 def trsm(u: jax.Array, b: jax.Array, *, block: int = 256,
-         interpret: bool = True) -> jax.Array:
-    """Solve X U = B; U (n, n) upper-triangular, B (m, n)."""
+         interpret: bool = True, tiles: Optional[TilePlan] = None,
+         mm_tiles: Optional[TilePlan] = None) -> jax.Array:
+    """Solve X U = B; U (n, n) upper-triangular, B (m, n).
+
+    ``tiles`` (a trsm :class:`TilePlan`, dim ``block``) overrides the block
+    size; ``mm_tiles`` is threaded to the trailing-update dgemms.
+    """
+    block = tile_block(tiles, "trsm", "block", block)
     n = u.shape[0]
     m = b.shape[0]
     if n % block != 0 or m % 128 != 0 or n < block:
@@ -35,7 +45,7 @@ def trsm(u: jax.Array, b: jax.Array, *, block: int = 256,
             u_panel = jax.lax.slice(u, (j * block, (j + 1) * block),
                                     ((j + 1) * block, n))
             upd = matmul(xj, u_panel, interpret=interpret,
-                         out_dtype=b_cur.dtype)
+                         out_dtype=b_cur.dtype, tiles=mm_tiles)
             tail = jax.lax.slice(b_cur, (0, (j + 1) * block), (m, n)) - upd
             b_cur = jnp.concatenate(
                 [jax.lax.slice(b_cur, (0, 0), (m, (j + 1) * block)), tail], axis=1)

@@ -29,6 +29,12 @@ from .evaluate import (EVAL_MODES, CollectiveStep, EvalOptions, EvalResult,
                        MODEL_VERSION, PhaseCost, collective_schedule,
                        evaluate_program)
 from .models import PROGRAMS, USEFUL_FLOPS, build_programs, lu_2d, lu_25d
+# kernel imports repro.core.machine; keep it LAST so the attributes above
+# exist if core's import of this package re-enters mid-initialization.
+from .kernel import (ALGO_KERNELS, CANDIDATE_SIZES, KERNEL_DIMS, KernelModel,
+                     KernelPhases, KernelWork, MIN_TILE, TilePlan,
+                     VMEM_BUDGET, candidate_tiles, heuristic_matmul_blocks,
+                     heuristic_plan, itemsize_of, kernel_work, tiles_for_plan)
 
 __all__ = [
     "C", "D", "Expr", "N", "P", "Param", "Q", "R", "T", "as_expr", "floor",
@@ -38,4 +44,8 @@ __all__ = [
     "EVAL_MODES", "CollectiveStep", "EvalOptions", "EvalResult",
     "MODEL_VERSION", "PhaseCost", "collective_schedule", "evaluate_program",
     "PROGRAMS", "USEFUL_FLOPS", "build_programs", "lu_2d", "lu_25d",
+    "ALGO_KERNELS", "CANDIDATE_SIZES", "KERNEL_DIMS", "KernelModel",
+    "KernelPhases", "KernelWork", "MIN_TILE", "TilePlan", "VMEM_BUDGET",
+    "candidate_tiles", "heuristic_matmul_blocks", "heuristic_plan",
+    "itemsize_of", "kernel_work", "tiles_for_plan",
 ]

@@ -34,9 +34,18 @@ EVAL_MODES = ("cal", "nocal", "ideal")
 
 @dataclasses.dataclass(frozen=True)
 class EvalOptions:
-    """How to evaluate: which estimator flavor (see module docstring)."""
+    """How to evaluate: which estimator flavor (see module docstring).
+
+    ``kernel_tier=True`` routes dgemm-shaped Compute leaves through the
+    intra-kernel model (``perf.kernel.KernelModel.best_time``: model-optimal
+    tiled time including H2D/D2H transfer and launch overheads) instead of
+    the efficiency-curve surface — only on machines whose profile carries a
+    ``kernel_constants`` block; others keep the curve path.  Off by
+    default, so existing predictions are bit-identical.
+    """
 
     mode: str = "cal"
+    kernel_tier: bool = False
 
     def __post_init__(self):
         if self.mode not in EVAL_MODES:
@@ -88,6 +97,12 @@ class _Evaluator:
         self.calibration = comm.calibration
         self.comp_machine = ctx.comp.machine
         self.efficiency = ctx.comp.efficiency
+        self.kernel_model = None
+        if options.kernel_tier and \
+                getattr(self.comp_machine, "kernel_constants", None) \
+                is not None:
+            from .kernel import KernelModel
+            self.kernel_model = KernelModel(self.comp_machine)
         self.phases: Dict[str, PhaseCost] = {}
 
     # -- the single calibration site ----------------------------------------
@@ -113,9 +128,17 @@ class _Evaluator:
     # -- leaf costs ----------------------------------------------------------
     def _t_rout(self, routine: str, block, threads):
         m = self.comp_machine
+        block = np.asarray(block, dtype=float)
+        if self.kernel_model is not None and routine == "dgemm":
+            # intra-kernel tier: model-optimal tiled dgemm time (incl.
+            # transfer and launch terms) for the local (b, b, b) block
+            edges = np.maximum(block.reshape(-1), 1.0)
+            t_k = self.kernel_model.best_time(
+                "matmul", {"m": edges, "k": edges, "n": edges},
+                int(m.word_bytes)).reshape(block.shape)
+            return np.where(block > 0, t_k, 0.0)
         t = m.threads_per_unit if threads is None else threads
         t = np.clip(t, 1, m.threads_per_unit)
-        block = np.asarray(block, dtype=float)
         flops = self.routine_flops[routine](block)
         eff = self.efficiency[routine].ev(block)
         out = flops / (m.peak_flops_per_thread * t * eff)

@@ -27,10 +27,11 @@ error -> drift detection retires the profile when reality moves again.
 
 from .store import RunRecord, RunStore, TELEMETRY_SCHEMA, telemetry_dir
 from .record import (PhaseTimer, default_store, disable, enable, enabled,
-                     observe_plan, phase_scope, reset, timer_for_plan)
+                     kernel_timer, observe_plan, phase_scope, reset,
+                     timer_for_plan)
 from .residuals import (Residual, TOTAL_PHASES, join, mean_abs_log_ratio,
                         split_comm_comp)
-from .refit import RefitResult, refit
+from .refit import KernelRefitResult, RefitResult, refit, refit_kernels
 from .drift import (DEFAULT_THRESHOLD, DEFAULT_WINDOW, DriftStatus,
                     bump_revision, check, detect_and_invalidate)
 from .report import accuracy_report, format_report, save_report
@@ -38,10 +39,10 @@ from .report import accuracy_report, format_report, save_report
 __all__ = [
     "RunRecord", "RunStore", "TELEMETRY_SCHEMA", "telemetry_dir",
     "PhaseTimer", "default_store", "disable", "enable", "enabled",
-    "observe_plan", "phase_scope", "reset", "timer_for_plan",
+    "kernel_timer", "observe_plan", "phase_scope", "reset", "timer_for_plan",
     "Residual", "TOTAL_PHASES", "join", "mean_abs_log_ratio",
     "split_comm_comp",
-    "RefitResult", "refit",
+    "KernelRefitResult", "RefitResult", "refit", "refit_kernels",
     "DEFAULT_THRESHOLD", "DEFAULT_WINDOW", "DriftStatus", "bump_revision",
     "check", "detect_and_invalidate",
     "accuracy_report", "format_report", "save_report",

@@ -161,6 +161,33 @@ def timer_for_plan(plan, kind: str = "dispatch",
                       predicted=dict(plan.predicted), meta=meta)
 
 
+def kernel_timer(kernel: str, shape, tiles, *, dtype: str = "float32",
+                 machine: str = "", fingerprint: str = "",
+                 itemsize: Optional[int] = None,
+                 mm_tile: Optional[Dict[str, int]] = None,
+                 predicted: Optional[Dict[str, float]] = None) -> PhaseTimer:
+    """A PhaseTimer for one Pallas kernel run, tagged the way
+    ``telemetry.refit_kernels`` consumes it: ``op = "kernel:<family>"``,
+    ``meta`` carrying the problem shape, the tile block dict (a
+    :class:`~repro.perf.kernel.TilePlan` or plain dict) and the itemsize.
+    Time the launch under ``phase("execute")`` (or split h2d/compute/d2h
+    when the harness can) and ``emit(force=True)``.
+    """
+    blocks = tiles.block_dict() if hasattr(tiles, "block_dict") else dict(tiles)
+    meta: Dict[str, object] = {
+        "kernel": kernel,
+        "shape": [int(x) for x in shape],
+        "tile": {d: int(v) for d, v in blocks.items()},
+        "itemsize": int(itemsize) if itemsize is not None else None,
+    }
+    if mm_tile:
+        meta["mm_tile"] = {d: int(v) for d, v in dict(mm_tile).items()}
+    return PhaseTimer(f"kernel:{kernel}", variant="pallas",
+                      n=int(max(shape)), dtype=dtype, machine=machine,
+                      fingerprint=fingerprint, kind="kernel",
+                      predicted=predicted, meta=meta)
+
+
 def observe_plan(plan, store: Optional[RunStore] = None) -> RunRecord:
     """Record a planning decision itself (``Tuner.plan(..., observe=True)``):
     a zero-phase record carrying the prediction, so the store holds what

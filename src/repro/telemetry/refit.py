@@ -29,8 +29,9 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ..core.fitting import multistart_nelder_mead, ridge_lstsq
-from ..core.machine import Machine
+from ..core.machine import KernelConstants, Machine
 from ..core.perfmodel import Calibration, CalibrationTable, EfficiencyCurve
+from ..perf.kernel import KernelModel, TilePlan, itemsize_of, kernel_work
 from .residuals import Residual, split_comm_comp
 
 #: fitted scales are clamped to this symmetric range — a refit may move a
@@ -191,6 +192,163 @@ def _fit_compute(comp_rows: Sequence[Residual], surface, comm_scale: float,
     speed = float(np.clip(math.exp(theta[0]), 1.0 / MAX_SCALE, MAX_SCALE))
     shape = float(np.clip(math.exp(theta[1]), math.exp(-2.0), math.exp(2.0)))
     return speed, shape
+
+
+# ---------------------------------------------------------------------------
+# Kernel-tier recalibration: recorded per-kernel phase times -> new constants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KernelRefitResult:
+    """A candidate kernel-constants revision, not yet registered."""
+
+    machine: Machine                # revision bumped, kernel_constants swapped
+    constants: KernelConstants
+    compute_scale: float    # fitted multiplier on the issue/execute term
+    loop_scale: float       # fitted multiplier on the per-grid-step term
+    h2d_scale: float        # fitted time multiplier on the H2D phase
+    d2h_scale: float        # fitted time multiplier on the D2H phase
+    n_rows: int
+
+    @property
+    def fingerprint(self) -> str:
+        return self.machine.fingerprint()
+
+    def apply(self, registry) -> Machine:
+        """Register the revision (efficiency/calibration surfaces carried
+        over unchanged — this refit only owns the kernel constants)."""
+        surface = registry.machine(self.machine.name)
+        registry.register_machine(self.machine, surface.efficiency,
+                                  surface.calibration, overwrite=True)
+        return self.machine
+
+
+def _kernel_rows(records, machine_name: str):
+    """(record, KernelWork, measured-phase dict) for every usable
+    ``kernel:<family>`` run record on this machine."""
+    rows = []
+    for rec in records:
+        op = getattr(rec, "op", "")
+        if not op.startswith("kernel:") or rec.machine != machine_name:
+            continue
+        meta = getattr(rec, "meta", None) or {}
+        shape = meta.get("shape")
+        tile = meta.get("tile")
+        if not shape or not tile:
+            continue
+        kernel = op.split(":", 1)[1]
+        itemsize = int(meta.get("itemsize") or itemsize_of(rec.dtype))
+        tiles = {d: np.asarray(float(v)) for d, v in dict(tile).items()}
+        mm_tile = meta.get("mm_tile")
+        mm = TilePlan.from_blocks("matmul", mm_tile) if mm_tile else None
+        try:
+            work = kernel_work(kernel, [float(x) for x in shape], tiles,
+                               itemsize, mm_tile=mm)
+        except (ValueError, KeyError):
+            continue
+        rows.append((rec, work))
+    return rows
+
+
+def _phase_time_scale(meas: np.ndarray, pred: np.ndarray,
+                      lam: float) -> float:
+    """Ridge log-ratio scalar (regularized toward 1): how much longer the
+    phase really takes than the model says."""
+    keep = (meas > 0) & (pred > 0)
+    if not np.any(keep):
+        return 1.0
+    y = np.log(meas[keep] / pred[keep])
+    theta = ridge_lstsq(np.ones((y.size, 1)), y, lam=lam)[0]
+    return float(np.clip(math.exp(theta), 1.0 / MAX_SCALE, MAX_SCALE))
+
+
+def refit_kernels(records, registry=None,
+                  machine_name: Optional[str] = None, *,
+                  ridge_lam: float = 2.0) -> KernelRefitResult:
+    """Fit a kernel-constants revision to recorded per-kernel phase times
+    (``op == "kernel:<family>"`` run records, as ``benchmarks/bench_kernels``
+    emits: ``meta`` carries shape/tile/itemsize, phases carry measured
+    seconds for ``execute`` — or ``h2d``/``compute``/``d2h`` when the
+    harness can split them).
+
+    The compute side is a two-feature linear ridge fit: measured compute
+    seconds against the model's issue/execute term and its per-grid-step
+    term, regularized toward "no change", so consistent evidence moves
+    ``overhead_factor`` and ``loop_overhead`` *independently* — that ratio
+    is exactly what tile selection trades off.  Transfer phases (when
+    present) refit as log-ratio scalars on ``bw_h2d`` / ``bw_d2h``.
+    """
+    if registry is None:
+        from ..tuner.registry import DEFAULT_REGISTRY
+        registry = DEFAULT_REGISTRY
+    records = list(records)
+    if machine_name is None:
+        for rec in records:
+            if getattr(rec, "op", "").startswith("kernel:"):
+                machine_name = rec.machine
+                break
+    if machine_name is None:
+        raise ValueError("refit_kernels needs at least one kernel:* record")
+    surface = registry.machine(machine_name)
+    kc = surface.machine.kernel_constants
+    if kc is None:
+        raise ValueError(f"machine {machine_name!r} has no kernel_constants "
+                         "block to refit")
+    rows = _kernel_rows(records, machine_name)
+    if not rows:
+        raise ValueError(f"no usable kernel:* records for {machine_name!r}")
+    model = KernelModel(surface.machine)
+
+    pure = np.array([float(w.flops_mxu / kc.fma_rate
+                           + w.flops_vpu / kc.vpu_rate) for _r, w in rows])
+    steps = np.array([float(w.steps) for _r, w in rows])
+    phases = [model.phases_of(w) for _r, w in rows]
+    pred_h2d = np.array([float(ph.h2d) for ph in phases])
+    pred_d2h = np.array([float(ph.d2h) for ph in phases])
+
+    def meas(name):
+        return np.array([float(r.phases.get(name, 0.0)) for r, _w in rows])
+
+    m_h2d, m_cmp, m_d2h, m_exec = (meas(k) for k in
+                                   ("h2d", "compute", "d2h", "execute"))
+    # un-split records: charge everything past the predicted transfer
+    # phases to the compute fit (on the interpret path compute dominates)
+    whole = (m_cmp == 0.0) & (m_exec > 0.0)
+    m_cmp = np.where(whole,
+                     np.maximum(m_exec - pred_h2d - pred_d2h, 0.0), m_cmp)
+
+    # measured_compute ~= s_exec * (pure * overhead) + s_loop * (steps * loop)
+    x1 = pure * kc.overhead_factor
+    x2 = steps * kc.loop_overhead
+    keep = (m_cmp > 0) & (x1 + x2 > 0)
+    if np.any(keep):
+        X = np.stack([x1[keep], x2[keep]], axis=1)
+        y = m_cmp[keep] - X.sum(axis=1)
+        # regularize the *deltas*: theta = 1 + ridge(X, y - X.1) pulls
+        # toward "constants already right", mirroring the log-space fits
+        scale = float(np.mean(X.sum(axis=1))) or 1.0
+        theta = 1.0 + ridge_lstsq(X / scale, y / scale, lam=ridge_lam)
+        s_exec, s_loop = (float(np.clip(t, 1.0 / MAX_SCALE, MAX_SCALE))
+                          for t in theta)
+    else:
+        s_exec = s_loop = 1.0
+    s_h2d = _phase_time_scale(m_h2d, pred_h2d, ridge_lam)
+    s_d2h = _phase_time_scale(m_d2h, pred_d2h, ridge_lam)
+
+    constants = dataclasses.replace(
+        kc,
+        overhead_factor=max(1.0, kc.overhead_factor * s_exec),
+        loop_overhead=kc.loop_overhead * s_loop,
+        bw_h2d=kc.bw_h2d / s_h2d,
+        bw_d2h=kc.bw_d2h / s_d2h)
+    machine = dataclasses.replace(surface.machine,
+                                  kernel_constants=constants,
+                                  revision=surface.machine.revision + 1)
+    return KernelRefitResult(machine=machine, constants=constants,
+                             compute_scale=s_exec, loop_scale=s_loop,
+                             h2d_scale=s_h2d, d2h_scale=s_d2h,
+                             n_rows=len(rows))
 
 
 def _scaled_calibration(old: Calibration, comm_scale: float,

@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core import predictor
 from ..core.algorithms import result_from_eval
+from ..perf.kernel import tiles_for_plan
 from .plan import (ExecutionPlan, PlanCache, machine_fingerprint, plan_key)
 from .registry import DEFAULT_REGISTRY, PerfModelRegistry, machine_for_platform
 
@@ -260,10 +261,18 @@ class Tuner:
                      "pct_peak": predictor.pct_of_peak(ctx, res)}
         if sim_extra is not None:
             predicted.update(sim_extra)
+        # the intra-kernel tier: per-family tile plans for the local Pallas
+        # kernels this algo will run — model-chosen when the machine profile
+        # has kernel constants, today's heuristic blocks otherwise
+        try:
+            profile = self.registry.machine(machine).machine
+        except KeyError:
+            profile = None
+        tiles = tiles_for_plan(profile, algo, n, g, dtype)
         return ExecutionPlan(
             algo=algo, variant=res.variant, n=n, p=p, c=c, r=res.r, g=g,
             local_kernel=local_kernel, dtype=dtype, machine=machine,
-            fingerprint=fp, predicted=predicted)
+            fingerprint=fp, predicted=predicted, tiles=tiles)
 
     def _sim_rerank(self, cands, totals, machine: str, n: int,
                     shortlist: int) -> Tuple[int, Dict[str, float]]:

@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..kernels.cholesky.ops import cholesky as _kchol
+from ..kernels.common import TilePlan
 from ..kernels.matmul.ops import matmul as _kmm
 from ..kernels.trsm.ops import trsm as _ktrsm
 # NB: import the factories, not the modules — the linalg package shadows
@@ -54,56 +55,54 @@ _MESHES: Dict[tuple, jax.sharding.Mesh] = {}
 _EXECUTORS: Dict[tuple, object] = {}
 
 
-# -- local kernel hooks (module-level so executor memoization is stable) ----
+# -- local kernel hooks -----------------------------------------------------
+# Hook closures are built per (algo, kernel, interpret, tiles) executor key
+# — the memo in _executor keeps their identity stable, so shard_map never
+# re-traces for a configuration it has already compiled.
 
-def _pallas_mm_interp(a, b):
-    return _kmm(a, b, interpret=True, out_dtype=a.dtype)
-
-
-def _pallas_mm_hw(a, b):
-    return _kmm(a, b, interpret=False, out_dtype=a.dtype)
-
-
-def _pallas_solve_interp(b, u):
-    return _ktrsm(u, b, interpret=True)
+def _tiles_key(tiles: Dict[str, Dict[str, int]]) -> tuple:
+    """Canonical hashable form of a plan's tiles map (executor memo key)."""
+    return tuple(sorted((fam, tuple(sorted(blocks.items())))
+                        for fam, blocks in (tiles or {}).items()))
 
 
-def _pallas_solve_hw(b, u):
-    return _ktrsm(u, b, interpret=False)
+def _tile_plans(tiles: Dict[str, Dict[str, int]]) -> Dict[str, TilePlan]:
+    """The plan's JSON tile map as jit-static TilePlan objects."""
+    return {fam: TilePlan.from_blocks(fam, blocks, source="plan")
+            for fam, blocks in (tiles or {}).items()}
 
 
-def _pallas_chol_interp(a):
-    return _kchol(a, interpret=True)
-
-
-def _pallas_chol_hw(a):
-    return _kchol(a, interpret=False)
-
-
-def _pallas_panel_solve_interp(a, ljj):
-    return _ktrsm(ljj.T, a, interpret=True)
-
-
-def _pallas_panel_solve_hw(a, ljj):
-    return _ktrsm(ljj.T, a, interpret=False)
-
-
-def _local_hooks(algo: str, local_kernel: str, interpret: bool) -> dict:
+def _local_hooks(algo: str, local_kernel: str, interpret: bool,
+                 tiles: Optional[Dict[str, Dict[str, int]]] = None) -> dict:
     if local_kernel != "pallas":
         return {}
-    mm = _pallas_mm_interp if interpret else _pallas_mm_hw
+    plans = _tile_plans(tiles)
+    mm_tp = plans.get("matmul")
+    trsm_tp = plans.get("trsm")
+    chol_tp = plans.get("cholesky")
+
+    def local_mm(a, b):
+        return _kmm(a, b, interpret=interpret, out_dtype=a.dtype,
+                    tiles=mm_tp)
+
     if algo in ("cannon", "summa"):
-        return {"local_mm": mm}
+        return {"local_mm": local_mm}
     if algo == "trsm":
-        return {"local_mm": mm,
-                "local_solve": _pallas_solve_interp if interpret
-                else _pallas_solve_hw}
+        def local_solve(b, u):
+            return _ktrsm(u, b, interpret=interpret, tiles=trsm_tp,
+                          mm_tiles=mm_tp)
+        return {"local_mm": local_mm, "local_solve": local_solve}
     if algo == "cholesky":
-        return {"local_mm": mm,
-                "local_chol": _pallas_chol_interp if interpret
-                else _pallas_chol_hw,
-                "local_solve": _pallas_panel_solve_interp if interpret
-                else _pallas_panel_solve_hw}
+        def local_chol(a):
+            return _kchol(a, interpret=interpret, tiles=chol_tp,
+                          mm_tiles=mm_tp)
+
+        def local_panel_solve(a, ljj):
+            # panel width is fixed by the diagonal factor's extent; only
+            # the dgemm tail inherits a tile choice here
+            return _ktrsm(ljj.T, a, interpret=interpret, mm_tiles=mm_tp)
+        return {"local_mm": local_mm, "local_chol": local_chol,
+                "local_solve": local_panel_solve}
     raise ValueError(algo)
 
 
@@ -124,11 +123,13 @@ def _mesh_for(g: int, c: int, devices: Tuple) -> jax.sharding.Mesh:
 
 def _executor(plan: ExecutionPlan, mesh, devices: Tuple, interpret: bool):
     key = (plan.algo, plan.variant, plan.g, plan.c,
-           tuple(d.id for d in devices), plan.local_kernel, interpret)
+           tuple(d.id for d in devices), plan.local_kernel, interpret,
+           _tiles_key(plan.tiles))
     with _LOCK:
         fn = _EXECUTORS.get(key)
     if fn is None:
-        hooks = _local_hooks(plan.algo, plan.local_kernel, interpret)
+        hooks = _local_hooks(plan.algo, plan.local_kernel, interpret,
+                             plan.tiles)
         fn = _MAKERS[plan.algo](mesh, plan.variant, **hooks)
         with _LOCK:
             if len(_EXECUTORS) > 64:

@@ -31,8 +31,8 @@ from ..perf import MODEL_VERSION
 
 #: bump when the plan *schema* (the JSON field set) changes incompatibly —
 #: stale cache entries are ignored, not misread.  Schema 2 added the
-#: ``model_version`` field.
-PLAN_SCHEMA = 2
+#: ``model_version`` field; schema 3 added the kernel-tier ``tiles`` map.
+PLAN_SCHEMA = 3
 
 
 def default_plan_dir() -> str:
@@ -79,6 +79,11 @@ class ExecutionPlan:
     machine: str            # machine-model name the prediction used
     fingerprint: str
     predicted: Dict[str, float]  # {"total": s, "comm": s, "comp": s}
+    # kernel family -> block dict, e.g. {"matmul": {"bm": 256, ...}} —
+    # resolved by the kernel-tier model (perf.kernel.tiles_for_plan), or
+    # the heuristic blocks when the machine has no kernel_constants
+    tiles: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -1,0 +1,307 @@
+"""Kernel-tier model tests: TilePlan invariants (property), heuristic
+bit-identity goldens, the _pick_blocks termination fix, the kernel_tier
+evaluate hook, refit_kernels, and tiles on Tuner plans + dispatch."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.machine import CPU_HOST, KernelConstants, TPU_V5E
+from repro.perf import EvalOptions, PROGRAMS, evaluate_program
+from repro.perf.kernel import (ALGO_KERNELS, KERNEL_DIMS, KernelModel,
+                               MIN_TILE, TilePlan, VMEM_BUDGET,
+                               candidate_tiles, heuristic_matmul_blocks,
+                               heuristic_plan, itemsize_of, kernel_work,
+                               tiles_for_plan)
+
+
+def _shape_for(kernel, n):
+    return {"matmul": (n, n, n), "trsm": (n, n), "cholesky": (n,),
+            "flash_attention": (2, n, n, 128), "ssm_scan": (2, n, 64, 64)}[
+        kernel]
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+class TestTilePlanInvariants:
+    """Property: every model-emitted plan fits VMEM and divides the padded
+    problem shape."""
+
+    @settings(deadline=None, max_examples=40)
+    @given(kernel=st.sampled_from(sorted(KERNEL_DIMS)),
+           n=st.integers(min_value=128, max_value=3000),
+           itemsize=st.sampled_from([2, 4, 8]))
+    def test_model_plan_feasible_and_divides(self, kernel, n, itemsize):
+        model = KernelModel(TPU_V5E)
+        shape = _shape_for(kernel, n)
+        plan = model.choose(kernel, shape, itemsize)
+        blocks = plan.block_dict()
+        assert set(blocks) == set(KERNEL_DIMS[kernel])
+        # every block respects the lane-tile floor
+        assert all(v >= MIN_TILE for v in blocks.values())
+        # VMEM feasibility: the plan's one-step working set fits (plans
+        # that fall back to the heuristic are exempt — that *is* the
+        # documented escape hatch for infeasible candidate grids)
+        tiles = {d: np.asarray(float(v)) for d, v in blocks.items()}
+        work = kernel_work(kernel, [float(x) for x in shape], tiles, itemsize)
+        if plan.source == "model":
+            assert float(work.vmem_bytes) <= \
+                TPU_V5E.kernel_constants.vmem_bytes
+        # divisibility: each block divides its padded extent
+        from repro.perf.kernel import _dim_extents
+        for dim, b in blocks.items():
+            extent = _dim_extents(kernel, shape)[dim]
+            assert _round_up(extent, b) % b == 0
+
+    @settings(deadline=None, max_examples=20)
+    @given(n=st.integers(min_value=256, max_value=4096),
+           itemsize=st.sampled_from([2, 4, 8]))
+    def test_trsm_cholesky_candidates_divide_edge(self, n, itemsize):
+        n = _round_up(n, 128)
+        for kernel in ("trsm", "cholesky"):
+            cands = candidate_tiles(kernel, _shape_for(kernel, n))
+            assert all(n % int(b) == 0 for b in cands["block"])
+
+    def test_tiny_vmem_falls_back_to_heuristic(self):
+        kc = dataclasses.replace(TPU_V5E.kernel_constants, vmem_bytes=1024.0)
+        machine = dataclasses.replace(TPU_V5E, kernel_constants=kc)
+        plan = KernelModel(machine).choose("matmul", (512, 512, 512), 8)
+        assert plan.source == "heuristic"
+        assert plan.block_dict() == {"bm": 256, "bn": 256, "bk": 512}
+
+
+class TestHeuristicGoldens:
+    """The no-profile path must reproduce today's hard-coded blocks."""
+
+    def test_matmul_heuristic_blocks_default(self):
+        # the historical start blocks fit the default budget at any
+        # realistic dtype, so the heuristic must return them untouched
+        for itemsize in (2, 4, 8):
+            plan = heuristic_plan("matmul", (4096, 4096, 4096), itemsize)
+            assert plan.block_dict() == {"bm": 256, "bn": 256, "bk": 512}
+            assert plan.source == "heuristic"
+
+    def test_family_heuristics_match_wrapper_defaults(self):
+        assert heuristic_plan("trsm", (512, 512), 4)["block"] == 256
+        assert heuristic_plan("cholesky", (512,), 4)["block"] == 256
+        fa = heuristic_plan("flash_attention", (2, 512, 512, 128), 4)
+        assert fa.block_dict() == {"bq": 256, "bkv": 256}
+        # 384 = 3*128: the wrapper's halving loop lands on 128
+        fa2 = heuristic_plan("flash_attention", (2, 384, 384, 128), 4)
+        assert fa2.block_dict() == {"bq": 128, "bkv": 128}
+        assert heuristic_plan("ssm_scan", (2, 512, 64, 64), 4)["bs"] == 256
+
+    def test_matmul_output_bit_identical_with_heuristic_plan(self):
+        import jax.numpy as jnp
+        from repro.kernels import matmul
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((300, 260)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((260, 700)), jnp.float32)
+        tp = heuristic_plan("matmul", (300, 260, 700), 4)
+        out_default = np.asarray(matmul(a, b))
+        out_plan = np.asarray(matmul(a, b, tiles=tp))
+        assert (out_default == out_plan).all()
+
+    def test_wrong_family_plan_rejected(self):
+        import jax.numpy as jnp
+        from repro.kernels import matmul
+        a = jnp.zeros((256, 256), jnp.float32)
+        with pytest.raises(ValueError, match="TilePlan"):
+            matmul(a, a, tiles=TilePlan.make("trsm", block=128))
+
+
+class TestPickBlocksTermination:
+    """Satellite fix: the shrink loop must terminate (floor-and-bail)
+    instead of spinning when even the floor blocks exceed the budget."""
+
+    def test_bails_at_floor_with_tiny_budget(self):
+        # (128*128 + 128*128)*8 + 128*128*4 = 327680 > 1000: the old loop
+        # spun forever here; the fix returns the floor blocks
+        assert heuristic_matmul_blocks(4096, 4096, 4096, 8,
+                                       vmem_budget=1000) == (128, 128, 128)
+
+    def test_budget_is_overridable(self):
+        # budget just below the default blocks' f64 footprint -> K shrinks
+        full = (256 * 512 + 512 * 256) * 8 + 256 * 256 * 4
+        bm, bn, bk = heuristic_matmul_blocks(4096, 4096, 4096, 8,
+                                             vmem_budget=full - 1)
+        assert (bm, bn, bk) == (256, 256, 256)
+        assert heuristic_matmul_blocks(
+            4096, 4096, 4096, 8, vmem_budget=VMEM_BUDGET) == (256, 256, 512)
+
+    def test_wrapper_pick_blocks_delegates(self):
+        from repro.kernels.matmul.ops import _pick_blocks
+        assert _pick_blocks(512, 512, 512, 4) == (256, 256, 512)
+        assert _pick_blocks(512, 512, 512, 8,
+                            vmem_budget=1000) == (128, 128, 128)
+
+
+class TestTilePlanObject:
+    def test_hashable_and_round_trips(self):
+        tp = TilePlan.make("matmul", bm=256, bn=256, bk=512)
+        assert hash(tp) == hash(TilePlan.make("matmul", bm=256, bn=256,
+                                              bk=512))
+        assert TilePlan.from_dict(tp.to_dict()) == dataclasses.replace(
+            tp, source="explicit")
+        assert tp["bk"] == 512 and tp.get("nope") is None
+
+    def test_make_validates_dims(self):
+        with pytest.raises(ValueError, match="missing"):
+            TilePlan.make("matmul", bm=256, bn=256)
+        with pytest.raises(ValueError, match="extra"):
+            TilePlan.make("trsm", block=256, bm=128)
+
+
+class TestKernelTierEvalHook:
+    def test_default_options_bit_identical(self):
+        from repro.tuner.registry import build_default_registry
+        reg = build_default_registry()
+        ctx = reg.context("tpu-v5e")
+        prog = PROGRAMS[("summa", "2d")]
+        base = evaluate_program(prog, ctx, 8192.0, 16.0, 1.0, 1.0)
+        again = evaluate_program(prog, ctx, 8192.0, 16.0, 1.0, 1.0,
+                                 options=EvalOptions())
+        assert float(base.total) == float(again.total)
+
+    def test_kernel_tier_changes_tpu_not_hopper(self):
+        from repro.tuner.registry import build_default_registry
+        reg = build_default_registry()
+        prog = PROGRAMS[("summa", "2d")]
+        kt = EvalOptions(kernel_tier=True)
+        ctx_t = reg.context("tpu-v5e")
+        t0 = float(evaluate_program(prog, ctx_t, 8192.0, 16.0, 1.0, 1.0).total)
+        t1 = float(evaluate_program(prog, ctx_t, 8192.0, 16.0, 1.0, 1.0,
+                                    options=kt).total)
+        assert t1 != t0 and t1 > 0.0
+        # hopper has no kernel_constants -> flag is a no-op there
+        ctx_h = reg.context("hopper-cray-xe6")
+        h0 = float(evaluate_program(prog, ctx_h, 8192.0, 16.0, 1.0, 1.0).total)
+        h1 = float(evaluate_program(prog, ctx_h, 8192.0, 16.0, 1.0, 1.0,
+                                    options=kt).total)
+        assert h1 == h0
+
+
+class TestKernelRefit:
+    def test_refit_updates_constants_and_revision(self):
+        from repro.telemetry import kernel_timer, refit_kernels
+        from repro.tuner.registry import build_default_registry
+        reg = build_default_registry()
+        machine = reg.machine("cpu-host").machine
+        model = KernelModel(machine)
+        recs = []
+        for n, blk in [(512, 128), (512, 256), (1024, 256), (1024, 512)]:
+            tp = TilePlan.make("matmul", bm=blk, bn=blk, bk=blk)
+            pt = kernel_timer("matmul", (n, n, n), tp, dtype="float32",
+                              machine="cpu-host", itemsize=4)
+            # consistent evidence: reality is 3x the model's compute time
+            pt.add("execute", 3.0 * model.time("matmul", (n, n, n), tp, 4))
+            recs.append(pt.record())
+        res = refit_kernels(recs, reg, "cpu-host")
+        old = machine.kernel_constants
+        assert res.machine.revision == machine.revision + 1
+        assert (res.constants.overhead_factor != old.overhead_factor
+                or res.constants.loop_overhead != old.loop_overhead)
+        assert res.compute_scale > 1.0
+        applied = res.apply(reg)
+        assert reg.machine("cpu-host").machine is applied
+        assert applied.fingerprint() != machine.fingerprint()
+
+    def test_refit_requires_kernel_records(self):
+        from repro.telemetry import refit_kernels
+        from repro.tuner.registry import build_default_registry
+        with pytest.raises(ValueError):
+            refit_kernels([], build_default_registry(), "cpu-host")
+
+
+class TestTunerTiles:
+    def test_plan_carries_tiles_per_kernel(self, tmp_path):
+        from repro.tuner.autotune import Tuner
+        t = Tuner(plan_dir=str(tmp_path))
+        for op, algo_kernels in (("matmul", ("matmul",)),
+                                 ("cholesky", ("matmul", "trsm",
+                                               "cholesky"))):
+            plan = t.plan(op, 1024, device_count=4, platform="cpu")
+            assert set(plan.tiles) == set(algo_kernels)
+            for fam, blocks in plan.tiles.items():
+                tp = TilePlan.from_blocks(fam, blocks)
+                assert set(tp.block_dict()) == set(KERNEL_DIMS[fam])
+
+    def test_plan_tiles_survive_cache_round_trip(self, tmp_path):
+        from repro.tuner.autotune import Tuner
+        t = Tuner(plan_dir=str(tmp_path))
+        first = t.plan("matmul", 1024, device_count=4, platform="cpu")
+        t.cache.clear_memory()
+        second = t.plan("matmul", 1024, device_count=4, platform="cpu")
+        assert second.tiles == first.tiles
+        assert t.cache.disk_hits >= 1
+
+    def test_tiles_for_plan_model_vs_heuristic(self):
+        # with kernel constants: model source allowed to deviate from the
+        # defaults; without (machine=None): exactly the heuristic blocks
+        got = tiles_for_plan(TPU_V5E, "cholesky", 8192, 4, "bfloat16")
+        assert set(got) == set(ALGO_KERNELS["cholesky"])
+        none = tiles_for_plan(None, "summa", 4096, 2, "float32")
+        assert none == {"matmul": {"bm": 256, "bn": 256, "bk": 512}}
+
+    def test_itemsize_of_handles_bf16(self):
+        assert itemsize_of("bfloat16") == 2
+        assert itemsize_of("float32") == 4
+        assert itemsize_of(np.dtype("float64")) == 8
+
+
+class TestDispatchExecutesTiles:
+    def test_pallas_dispatch_with_tiles(self, tmp_path):
+        import subprocess
+        import sys
+        import os
+        code = r"""
+import numpy as np
+from repro.tuner import dispatch
+from repro.tuner.autotune import Tuner
+import os
+t = Tuner(plan_dir=os.environ["PLAN_DIR"])
+plan = t.plan("matmul", 512, device_count=4, platform="cpu",
+              local_kernel="pallas")
+assert plan.tiles.get("matmul"), plan.tiles
+rng = np.random.default_rng(0)
+a = rng.standard_normal((512, 512)).astype(np.float32)
+b = rng.standard_normal((512, 512)).astype(np.float32)
+out = dispatch.matmul(a, b, tuner=t, local_kernel="pallas")
+assert np.allclose(np.asarray(out), a @ b, atol=1e-2)
+print("OK")
+"""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4"
+                            ).strip()
+        env["PLAN_DIR"] = str(tmp_path)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=560)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
+
+class TestKernelConstantsProfile:
+    def test_fingerprint_covers_kernel_constants(self):
+        base = CPU_HOST.fingerprint()
+        kc = dataclasses.replace(CPU_HOST.kernel_constants,
+                                 loop_overhead=123e-6)
+        assert dataclasses.replace(
+            CPU_HOST, kernel_constants=kc).fingerprint() != base
+
+    def test_seeded_profiles(self):
+        for m in (TPU_V5E, CPU_HOST):
+            kc = m.kernel_constants
+            assert isinstance(kc, KernelConstants)
+            assert kc.overhead_factor >= 1.0
+            assert kc.bw_h2d > kc.bw_d2h     # the H2D/D2H asymmetry
+        from repro.core.machine import HOPPER
+        assert HOPPER.kernel_constants is None
