@@ -1,0 +1,181 @@
+"""Serving scheduler benchmark — the paper's predict/measure/refit loop
+applied to continuous batching, emitted as
+``artifacts/bench/BENCH_serving.json``.
+
+Phase A (calibrate): run real scheduler steps over a tiny model with
+telemetry recording on, so every step carries (predicted, measured)
+prefill/decode phases; ``refit_serving`` fits the per-phase scales and
+the post-refit mean relative error on serving steps is the accuracy
+gate (CI requires <= 0.35, the paper-style "model matches machine" bar).
+
+Phase B (replay): a >= 10k-request skewed synthetic trace replayed on
+the simulated clock under FIFO and under the model-guided policy —
+same trace, same (calibrated) cost model, same SLOs.  CI gates on the
+model-guided policy achieving >= FIFO goodput and strictly better p95
+TTFT.
+
+Phase C (re-key): a drift-style machine revision bump must retire the
+calibrated serving cost table exactly like it retires tuner plans.
+"""
+
+import dataclasses
+import shutil
+import tempfile
+import time
+
+
+def _calibrate(n_requests: int = 16) -> dict:
+    """Phase A: measured serve steps -> telemetry -> refit_serving."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import telemetry
+    from repro.configs import get
+    from repro.core.machine import CPU_HOST
+    from repro.models import build_model
+    from repro.serving.cost import cost_model_for, refit_serving
+    from repro.serving.policy import ModelGuidedPolicy
+    from repro.serving.scheduler import (ModelBackend, Request, Scheduler,
+                                         SchedulerConfig)
+    from repro.telemetry import residuals
+
+    cfg = get("qwen1.5-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cost = cost_model_for(cfg, CPU_HOST)
+    rng = np.random.default_rng(0)
+
+    def workload(tag: str) -> Scheduler:
+        backend = ModelBackend(model, params, max_cache_len=128)
+        sched = Scheduler(backend, cost,
+                          SchedulerConfig(max_cache_len=128, max_batch=8),
+                          policy=ModelGuidedPolicy(step_budget_s=0.05))
+        r = np.random.default_rng(1)
+        # long-ish decodes keep the decode batch shape stable between
+        # steps, so measured step times are dominated by real work, not
+        # by batch-churn noise — exactly the rows the affine refit wants
+        for i in range(n_requests):
+            plen = int(r.integers(8, 48))
+            sched.submit(Request(
+                rid=f"{tag}{i}",
+                prompt=jnp.asarray(r.integers(1, cfg.vocab_size, (1, plen)),
+                                   jnp.int32),
+                max_new_tokens=int(r.integers(16, 33)),
+                arrival_s=0.002 * i))
+        return sched
+
+    workload("warm").run()          # compile every step shape off the record
+
+    tmp = tempfile.mkdtemp(prefix="bench_serving_")
+    try:
+        telemetry.enable(telemetry.RunStore(tmp))
+        t0 = time.perf_counter()
+        sched = workload("c")
+        reports = sched.run()
+        wall = time.perf_counter() - t0
+        records = [r for r in telemetry.default_store().load()
+                   if r.kind == "serve_step"]
+    finally:
+        telemetry.reset()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    refit = refit_serving(records, cost)
+    rows = residuals.join(records)
+    del rng
+    return {
+        "requests": n_requests,
+        "steps": len(reports),
+        "wall_s": wall,
+        "serve_step_records": len(records),
+        "residual_rows": len(rows),
+        "refit": refit.to_dict(),
+        "mean_rel_err_after_refit": refit.mean_rel_err_after,
+        "scales": refit.scales.to_dict(),
+    }
+
+
+def _replay(scales, n_requests: int = 10_000) -> dict:
+    """Phase B: big-trace policy comparison on the simulated clock."""
+    from repro.configs import get
+    from repro.core.machine import CPU_HOST
+    from repro.serving.cost import ServeCostModel
+    from repro.serving.trace import TraceConfig, compare_policies, \
+        synthesize_trace
+
+    cfg = get("qwen1.5-4b").reduced()
+    cost = ServeCostModel(cfg, CPU_HOST, scales)
+    # arrival rate just past the calibrated capacity knee (~4 req/s on
+    # cpu-host scales): the regime where composition matters — lighter
+    # and FIFO is fine, heavier and nobody meets SLOs
+    trace = synthesize_trace(TraceConfig(n_requests=n_requests, seed=0,
+                                         arrival_rate=4.5))
+    t0 = time.perf_counter()
+    reps = compare_policies(trace, cost, step_budget_s=0.06)
+    wall = time.perf_counter() - t0
+    fifo, model = reps["fifo"], reps["model"]
+    return {
+        "n_requests": n_requests,
+        "replay_wall_s": wall,
+        "fifo": fifo.to_dict(),
+        "model": model.to_dict(),
+        "goodput_ratio_model_over_fifo":
+            (model.goodput_rps / fifo.goodput_rps
+             if fifo.goodput_rps > 0 else float("inf")),
+        "ttft_p95_fifo_s": fifo.ttft_p95_s,
+        "ttft_p95_model_s": model.ttft_p95_s,
+        "model_beats_fifo_p95_ttft": model.ttft_p95_s < fifo.ttft_p95_s,
+        "model_goodput_ge_fifo": model.goodput_rps >= fifo.goodput_rps,
+    }
+
+
+def _rekey() -> dict:
+    """Phase C: a revision bump retires the calibrated cost table."""
+    from repro.configs import get
+    from repro.core.machine import CPU_HOST
+    from repro.serving.cost import ServeScales, cost_model_for, install_scales
+
+    cfg = get("qwen1.5-4b").reduced()
+    install_scales(cfg, CPU_HOST, ServeScales(prefill_scale=2.0,
+                                              decode_scale=2.0,
+                                              overhead_s=1e-4))
+    calibrated = cost_model_for(cfg, CPU_HOST).scales.prefill_scale
+    bumped = dataclasses.replace(CPU_HOST, revision=CPU_HOST.revision + 1)
+    fresh = cost_model_for(cfg, bumped).scales.prefill_scale
+    return {
+        "calibrated_scale": calibrated,
+        "post_bump_scale": fresh,
+        "rekey_ok": calibrated == 2.0 and fresh == 1.0,
+    }
+
+
+def main() -> dict:
+    from repro.serving.cost import ServeScales
+
+    cal = _calibrate()
+    # the replay gate uses a *pinned* cpu-host calibration (a refit
+    # output captured once) rather than this run's fitted scales, so the
+    # FIFO-vs-model comparison is bit-deterministic in CI — Phase A
+    # above is where live measurement noise is allowed to show up
+    replay = _replay(ServeScales(prefill_scale=0.357, decode_scale=2.497,
+                                 overhead_s=7.5e-4))
+    rekey = _rekey()
+    return {
+        "calibration": cal,
+        "replay": replay,
+        "rekey": rekey,
+        "gates": {
+            "post_refit_mean_rel_err_le_035":
+                cal["mean_rel_err_after_refit"] <= 0.35,
+            "model_goodput_ge_fifo": replay["model_goodput_ge_fifo"],
+            "model_beats_fifo_p95_ttft":
+                replay["model_beats_fifo_p95_ttft"],
+            "rekey_ok": rekey["rekey_ok"],
+        },
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(main(), indent=1))

@@ -188,6 +188,20 @@ def bench_kernels():
              "interpret-mode (CPU validation; TPU is the target)")
 
 
+def bench_serving():
+    t0 = time.perf_counter()
+    from benchmarks.bench_serving import main as serve
+    res = serve()
+    _save("BENCH_serving", res)
+    rp, cal = res["replay"], res["calibration"]
+    emit("serving_scheduler", (time.perf_counter() - t0) * 1e6,
+         f"refit_err={cal['mean_rel_err_after_refit']:.2f} "
+         f"goodput_ratio={rp['goodput_ratio_model_over_fifo']:.2f} "
+         f"p95ttft_fifo={rp['ttft_p95_fifo_s']:.2f}s "
+         f"p95ttft_model={rp['ttft_p95_model_s']:.2f}s "
+         f"replayed={rp['n_requests']}")
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -201,6 +215,7 @@ BENCHES = {
     "sim": bench_sim,
     "sim_scale": bench_sim_scale,
     "telemetry": bench_telemetry,
+    "serving": bench_serving,
 }
 
 

@@ -229,6 +229,63 @@ def attention_decode(p, cfg, x, cache: KVCache, *, window: int = 0):
     return out, KVCache(k, v, cache.length + s1)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool shim (serving)
+# ---------------------------------------------------------------------------
+# The serving scheduler accounts KV capacity in fixed-size blocks
+# (repro.serving.kvblocks); physically the pool is one array of shape
+# (num_blocks, KV, block_size, hd) per k/v.  A real paged-attention
+# Pallas kernel would consume the block table directly; until then these
+# two functions are the documented bridge: scatter a request's
+# contiguous ring cache into its table's blocks, and gather a table back
+# into the contiguous KVCache that attention_decode consumes.  The
+# round trip is exact (property-tested), so the block manager can defrag
+# or swap blocks without touching attention math.
+
+def paged_kv_pool(num_blocks: int, block_size: int, kv_heads: int, hd: int,
+                  dtype=jnp.float32):
+    """Zeroed physical pool: (pool_k, pool_v), each
+    (num_blocks, KV, block_size, hd)."""
+    z = jnp.zeros((num_blocks, kv_heads, block_size, hd), dtype)
+    return z, z
+
+
+def scatter_block_kv(pool_k, pool_v, cache: KVCache, block_table):
+    """Write a single-request contiguous cache into its pool blocks.
+
+    cache.k/v: (1, KV, S, hd) with S <= len(block_table) * block_size
+    (short caches are zero-padded into the last block).  Returns the
+    updated (pool_k, pool_v)."""
+    table = jnp.asarray(block_table, jnp.int32)
+    nb, bs = table.shape[0], pool_k.shape[2]
+    kvh, s, hd = cache.k.shape[1], cache.k.shape[2], cache.k.shape[3]
+    if s > nb * bs:
+        raise ValueError(f"cache length {s} exceeds table capacity {nb * bs}")
+
+    def to_blocks(x):
+        x = x[0]                                       # (KV, S, hd)
+        x = jnp.pad(x, ((0, 0), (0, nb * bs - s), (0, 0)))
+        return x.reshape(kvh, nb, bs, hd).transpose(1, 0, 2, 3)
+
+    return (pool_k.at[table].set(to_blocks(cache.k).astype(pool_k.dtype)),
+            pool_v.at[table].set(to_blocks(cache.v).astype(pool_v.dtype)))
+
+
+def gather_block_kv(pool_k, pool_v, block_table, length) -> KVCache:
+    """Assemble the contiguous (1, KV, nb * block_size, hd) cache a block
+    table denotes — the gather a paged attention kernel makes implicit."""
+    table = jnp.asarray(block_table, jnp.int32)
+    nb, kvh, bs, hd = pool_k.shape
+    nt = table.shape[0]
+
+    def from_blocks(pool):
+        x = pool[table]                                # (nt, KV, bs, hd)
+        return x.transpose(1, 0, 2, 3).reshape(kvh, nt * bs, hd)[None]
+
+    return KVCache(from_blocks(pool_k), from_blocks(pool_v),
+                   jnp.asarray(length, jnp.int32))
+
+
 def cross_attention(p, cfg, x, memory):
     """x: (B, S, D) attends to memory (B, M, D) (encoder states / image
     patch embeddings).  No positions on q/k (whisper & llama-vision style

@@ -1,18 +1,31 @@
-"""Batched decode engine: prompt ingestion + token-by-token generation over
-the uniform Model facade (KV caches for attention archs, recurrent state
-for SSM/hybrid).  Used by the serving example and the decode-shape
-benchmark; the dry-run lowers ``serve_step`` (one new token against a full
-cache) directly.
+"""Single-call generation facade over the continuous-batching scheduler.
+
+``Engine.generate`` is now a thin wrapper: each prompt row becomes one
+:class:`~.scheduler.Request`, the batch is submitted to a
+:class:`~.scheduler.Scheduler` over a :class:`~.scheduler.ModelBackend`
+(per-request caches, vmapped batched decode), and the scheduler's
+admission/compose/evict loop runs it to completion.  One code path
+serves both the one-shot API and the streaming trace-replay harness, so
+the single-request semantics the tests pin down (greedy determinism,
+chunked-prefill equivalence, ring-buffer safety) are exactly the
+semantics of the continuous-batching engine.
+
+Generation for a request ends at ``max_new_tokens`` or earlier on an
+EOS / stop token (``ServeConfig.eos_id`` / ``stop_ids``); early-stopped
+rows are right-padded so the output shape stays ``(B, S + max_new)``.
+No decode step runs after a request's last token — the scheduler evicts
+on completion instead of stepping once more and discarding the logits.
 
 With telemetry recording on (``REPRO_TELEMETRY=1`` /
 ``repro.telemetry.enable()``) every ``generate`` call emits one measured
-run — prefill and decode as separate phases, blocked to completion — so
-the serving path feeds the same measured-run loop as linalg dispatch."""
+run — prefill and decode as separate phases, blocked to completion — and
+the scheduler additionally emits one ``serve_step`` record per step with
+the cost model's prediction attached, feeding the refit loop."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +39,10 @@ class ServeConfig:
     temperature: float = 0.0           # 0 = greedy
     max_cache_len: int = 4096
     prefill_chunk: Optional[int] = None  # None: ask the tuner; 1: per-token
+    eos_id: Optional[int] = None       # generation stops when sampled
+    stop_ids: Tuple[int, ...] = ()     # additional per-request stop tokens
+    pad_id: Optional[int] = None       # fill for early-stopped rows
+                                       # (default: eos_id, else 0)
 
 
 def make_serve_step(model: Model):
@@ -40,11 +57,13 @@ def make_serve_step(model: Model):
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model: Model, params,
+                 cfg: Optional[ServeConfig] = None):
         self.model = model
         self.params = params
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else ServeConfig()
         self._step = jax.jit(make_serve_step(model))
+        self._backend = None           # built lazily, reused across calls
 
     def _prefill_chunk(self, seq_len: int) -> int:
         # architecture gate first: recurrent decode paths and sliding-window
@@ -55,29 +74,6 @@ class Engine:
             return max(1, self.cfg.prefill_chunk)
         from ..tuner import default_tuner
         return default_tuner().prefill_chunk(seq_len)
-
-    def _ingest(self, prompts: jax.Array, caches, memory):
-        """Cache-filling prefill: chunked when the architecture allows it
-        (two compiled shapes total — the chunk and the 1-token remainder),
-        token-by-token otherwise.
-
-        A chunk must never touch the KV ring-buffer boundary
-        (attention_decode's precondition): chunked steps stop at
-        ``max_cache_len`` and the tail falls back to single-token steps,
-        whose ring-wrap semantics are well defined."""
-        b, s = prompts.shape
-        chunk = self._prefill_chunk(s)
-        limit = self.cfg.max_cache_len
-        logits = None
-        i = 0
-        while chunk > 1 and s - i >= chunk and i + chunk <= limit:
-            logits, caches = self._step(self.params, prompts[:, i:i + chunk],
-                                        caches, memory)
-            i += chunk
-        for j in range(i, s):
-            logits, caches = self._step(self.params, prompts[:, j:j + 1],
-                                        caches, memory)
-        return logits, caches
 
     def _timer(self, seq_len: int):
         """A telemetry PhaseTimer tagged for this engine, or None when
@@ -104,36 +100,65 @@ class Engine:
             p=len(devs), machine=name, fingerprint=fp, kind="serve",
             meta={"max_new_tokens": self.cfg.max_new_tokens})
 
-    def generate(self, prompts: jax.Array, *, batch_inputs: Optional[Dict[str, Any]] = None,
+    def _make_scheduler(self, batch: int, phase_timer):
+        from ..core.machine import CPU_HOST
+        from .cost import cost_model_for
+        from .policy import FIFOPolicy
+        from .scheduler import ModelBackend, Scheduler, SchedulerConfig
+
+        if self._backend is None:
+            self._backend = ModelBackend(
+                self.model, self.params,
+                max_cache_len=self.cfg.max_cache_len,
+                prefill_chunk=self.cfg.prefill_chunk, step=self._step)
+        cost = cost_model_for(self.model.cfg, CPU_HOST)
+        scfg = SchedulerConfig(max_cache_len=self.cfg.max_cache_len,
+                               max_batch=max(batch, 1),
+                               max_active=max(batch, 1))
+        return Scheduler(self._backend, cost, scfg, policy=FIFOPolicy(),
+                         phase_timer=phase_timer)
+
+    def generate(self, prompts: jax.Array, *,
+                 batch_inputs: Optional[Dict[str, Any]] = None,
                  seed: int = 0) -> jax.Array:
-        """prompts: (B, S) int32.  Returns (B, S + max_new) tokens."""
+        """prompts: (B, S) int32.  Returns (B, S + max_new) tokens;
+        rows that hit an EOS/stop token early are padded to shape."""
+        from .scheduler import Request
+
         b, s = prompts.shape
+        cfg = self.cfg
+        if cfg.max_new_tokens <= 0:
+            return prompts
         pt = self._timer(s)
         memory = None
         if batch_inputs:
             memory = self.model.encode_memory(self.params, batch_inputs)
-        caches = self.model.init_cache(b, self.cfg.max_cache_len)
-        from ..telemetry import phase_scope
-        with phase_scope(pt, "prefill"):
-            logits, caches = self._ingest(prompts, caches, memory)
-            if pt is not None:
-                jax.block_until_ready(logits)
-        key = jax.random.PRNGKey(seed)
-        out = [prompts]
-        tok = None
-        with phase_scope(pt, "decode"):
-            for t in range(self.cfg.max_new_tokens):
-                if self.cfg.temperature > 0:
-                    key, sub = jax.random.split(key)
-                    tok = jax.random.categorical(
-                        sub, logits[:, -1] / self.cfg.temperature)[:, None]
-                else:
-                    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-                out.append(tok.astype(jnp.int32))
-                logits, caches = self._step(self.params, tok.astype(jnp.int32),
-                                            caches, memory)
-            if pt is not None:
-                jax.block_until_ready(logits)
+
+        sched = self._make_scheduler(b, pt)
+        rids = []
+        for i in range(b):
+            rids.append(sched.submit(Request(
+                rid=f"g{i}", prompt=prompts[i:i + 1],
+                max_new_tokens=cfg.max_new_tokens,
+                eos_id=cfg.eos_id, stop_ids=tuple(cfg.stop_ids),
+                memory=None if memory is None else memory[i:i + 1],
+                temperature=cfg.temperature, seed=seed + i)))
+        sched.run()
         if pt is not None:
             pt.emit()
-        return jnp.concatenate(out, axis=1)
+
+        pad = cfg.pad_id if cfg.pad_id is not None \
+            else (cfg.eos_id if cfg.eos_id is not None else 0)
+        rows = []
+        for rid in rids:
+            toks = sched.finished[rid].out
+            gen = jnp.concatenate(
+                [jnp.asarray(t, jnp.int32).reshape(1, 1) for t in toks],
+                axis=1)
+            if gen.shape[1] < cfg.max_new_tokens:
+                gen = jnp.pad(gen,
+                              ((0, 0), (0, cfg.max_new_tokens - gen.shape[1])),
+                              constant_values=pad)
+            rows.append(gen)
+        return jnp.concatenate([prompts, jnp.concatenate(rows, axis=0)],
+                               axis=1)

@@ -44,12 +44,17 @@ class DriftStatus:
 
 
 def check(rows: Sequence[Residual], *, threshold: float = DEFAULT_THRESHOLD,
-          window: int = DEFAULT_WINDOW) -> Dict[str, DriftStatus]:
+          window: int = DEFAULT_WINDOW,
+          sources: Sequence[str] = ("model",)) -> Dict[str, DriftStatus]:
     """Per-op rolling mean relative error over the newest ``window`` rows
-    (model-source rows only; the sim flavor has its own error profile)."""
+    (model-source rows by default; the sim flavor has its own error
+    profile).  Pass ``sources=("model", "serve")`` to let scheduler
+    serve-step residuals trigger invalidation too — a revision bump
+    re-keys the serving cost tables exactly like the tuner plan cache,
+    since both are keyed by ``Machine.fingerprint()``."""
     by_op: Dict[str, List[Residual]] = {}
     for r in rows:
-        if r.source != "model":
+        if r.source not in sources:
             continue
         by_op.setdefault(r.op, []).append(r)
     out: Dict[str, DriftStatus] = {}
@@ -79,12 +84,14 @@ def bump_revision(registry, machine_name: str) -> Machine:
 def detect_and_invalidate(rows: Sequence[Residual], registry,
                           machine_name: str, *,
                           threshold: float = DEFAULT_THRESHOLD,
-                          window: int = DEFAULT_WINDOW
+                          window: int = DEFAULT_WINDOW,
+                          sources: Sequence[str] = ("model",)
                           ) -> Optional[Machine]:
     """The full drift step: check the rolling error; on any drifted op,
     bump the machine revision.  Returns the new Machine (None when the
     profile is still healthy)."""
-    statuses = check(rows, threshold=threshold, window=window)
+    statuses = check(rows, threshold=threshold, window=window,
+                     sources=sources)
     if not any(s.drifted for s in statuses.values()):
         return None
     return bump_revision(registry, machine_name)

@@ -75,7 +75,13 @@ def join(runs: Sequence[RunRecord], registry=None, *,
     Runs whose (op, variant) has no registered cost-IR program, whose
     machine is unknown to the registry, or whose phases are all overhead
     (no model analog) contribute nothing — serving records join only
-    if an LM program is registered under their op.
+    if an LM program is registered under their op.  The exception is
+    scheduler ``serve_step`` records: they carry the serving cost
+    model's own per-phase prediction inline (made at scheduling time,
+    under the scales then installed), so they self-join without any
+    registry lookup and come back tagged ``source="serve"`` —
+    ``cost.refit_serving`` consumes them, and ``accuracy_report`` (which
+    aggregates only ``source="model"`` rows) stays unaffected.
 
     ``include_sim=True`` replays every distinct joinable scenario through
     the per-rank simulator in one ``simulate_programs`` batch per machine
@@ -88,6 +94,9 @@ def join(runs: Sequence[RunRecord], registry=None, *,
         _batch_sim_totals(runs, registry, eval_cache)
     for run in runs:
         if not run.phases:
+            continue
+        if run.kind == "serve_step" and run.predicted:
+            rows.extend(_self_join(run))
             continue
         if not registry.has_program(run.op, run.variant):
             continue
@@ -128,6 +137,22 @@ def join(runs: Sequence[RunRecord], registry=None, *,
                                      source="sim", machine=run.machine,
                                      timestamp=run.timestamp))
     rows.sort(key=lambda r: r.timestamp)
+    return rows
+
+
+def _self_join(run: RunRecord) -> List[Residual]:
+    """Residual rows for a record that carries its own prediction
+    (scheduler serve_steps): measured phase vs the same-named entry of
+    ``run.predicted``, no registry round-trip."""
+    rows = []
+    for phase, measured in run.phases.items():
+        predicted = run.predicted.get(phase)
+        if not predicted or measured <= 0.0 or predicted <= 0.0:
+            continue
+        rows.append(Residual(run.op, run.variant, run.n, run.p, run.c,
+                             phase, float(measured), float(predicted),
+                             source="serve", machine=run.machine,
+                             timestamp=run.timestamp))
     return rows
 
 

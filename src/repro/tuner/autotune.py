@@ -376,6 +376,30 @@ class Tuner:
             chunk *= 2
         return chunk
 
+    def serve_chunk(self, remaining: int, *, ctx0: int, cost, budget_s: float,
+                    granularity: int = 8, base_prefill=(),
+                    base_prefill_s: Optional[float] = None) -> int:
+        """Prefill chunk sizing for the serving scheduler's batch mix: the
+        largest token count (a multiple of ``granularity``, so the engine
+        keeps its two compiled shapes) whose *marginal* predicted prefill
+        time — on top of the chunks already packed into this step
+        (``base_prefill``) — fits ``budget_s``.  Returns 0 when even one
+        granularity chunk cannot fit; the policy decides whether to force
+        progress anyway."""
+        if remaining <= 0 or budget_s <= 0:
+            return 0
+        g = max(1, int(granularity))
+        base = list(base_prefill)
+        base_s = base_prefill_s if base_prefill_s is not None else (
+            cost.prefill_step(base).prefill_s if base else 0.0)
+        n = int(remaining)
+        while n > 0:
+            marginal = cost.prefill_step(base + [(n, ctx0)]).prefill_s - base_s
+            if marginal <= budget_s:
+                return n
+            n = (n // 2) // g * g if n > g else 0
+        return 0
+
 
 _DEFAULT: Optional[Tuner] = None
 _DEFAULT_LOCK = threading.Lock()

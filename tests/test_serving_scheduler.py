@@ -1,0 +1,402 @@
+"""Serving subsystem tests: paged KV blocks, scheduler join/evict
+bit-exactness, EOS early stop, policy contrast, cost-table keying and
+telemetry refit of serving predictions."""
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get
+from repro.core.machine import CPU_HOST
+from repro.models import build_model
+from repro.serving import (BlockCapacityError, BlockManager, Engine,
+                           ModelGuidedPolicy, Request, Scheduler,
+                           SchedulerConfig, ServeConfig, ServeCostModel,
+                           SimBackend, TraceConfig, blocks_for,
+                           compare_policies, cost_model_for, install_scales,
+                           refit_serving, synthesize_trace)
+from repro.serving.cost import ServeScales
+from repro.serving.scheduler import ModelBackend
+from repro.telemetry.store import RunRecord
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get("qwen1.5-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# BlockManager invariants
+# ---------------------------------------------------------------------------
+
+class TestBlockManager:
+    def test_blocks_for(self):
+        assert blocks_for(0, 16) == 0
+        assert blocks_for(1, 16) == 1
+        assert blocks_for(16, 16) == 1
+        assert blocks_for(17, 16) == 2
+
+    def test_exact_capacity(self):
+        bm = BlockManager(num_blocks=4, block_size=16)
+        bm.allocate("a", 64)                     # exactly the whole pool
+        assert bm.free_blocks == 0
+        assert not bm.can_admit(1)
+        with pytest.raises(BlockCapacityError):
+            bm.allocate("b", 1)
+        bm.free("a")
+        assert bm.free_blocks == 4
+        bm.check()
+
+    def test_double_free_raises(self):
+        bm = BlockManager(4, 16)
+        bm.allocate("a", 10)
+        bm.free("a")
+        with pytest.raises(KeyError):
+            bm.free("a")
+
+    def test_no_overlap_between_requests(self):
+        bm = BlockManager(8, 16)
+        ta = bm.allocate("a", 40)
+        tb = bm.allocate("b", 40)
+        assert not set(ta) & set(tb)
+        bm.check()
+
+    def test_defrag_relabels_onto_lowest_ids(self):
+        bm = BlockManager(8, 16)
+        bm.allocate("a", 32)
+        bm.allocate("b", 32)
+        bm.allocate("c", 32)
+        bm.free("b")
+        assert bm.fragmentation() >= 0.0
+        moved = bm.defrag()
+        bm.check()
+        assert bm.block_table("a") == [0, 1]
+        assert bm.block_table("c") == [2, 3]
+        assert moved == {4: 2, 5: 3}
+        assert bm.fragmentation() == 0.0
+
+    @given(seed=st.integers(0, 31), num_blocks=st.sampled_from([3, 8, 17]))
+    @settings(max_examples=24, deadline=None)
+    def test_random_op_sequences_hold_invariants(self, seed, num_blocks):
+        rng = random.Random(seed)
+        bm = BlockManager(num_blocks=num_blocks, block_size=8)
+        live = []
+        for i in range(60):
+            op = rng.choice(["alloc", "alloc", "extend", "append", "free",
+                             "defrag"])
+            if op == "alloc":
+                rid = f"r{seed}-{i}"
+                need = rng.randint(1, num_blocks * 8)
+                if bm.can_admit(need):
+                    table = bm.allocate(rid, need)
+                    assert len(table) == blocks_for(need, 8)
+                    live.append(rid)
+                else:
+                    with pytest.raises(BlockCapacityError):
+                        bm.allocate(rid, need)
+            elif op == "extend" and live:
+                rid = rng.choice(live)
+                need = rng.randint(1, 16)
+                if blocks_for(need, 8) <= bm.free_blocks:
+                    bm.extend(rid, need)
+            elif op == "append" and live:
+                bm.append_tokens(rng.choice(live), rng.randint(1, 12))
+            elif op == "free" and live:
+                rid = live.pop(rng.randrange(len(live)))
+                bm.free(rid)
+            elif op == "defrag":
+                before = {r: len(bm.block_table(r)) for r in bm.requests()}
+                bm.defrag()
+                after = {r: len(bm.block_table(r)) for r in bm.requests()}
+                assert before == after
+            bm.check()
+            assert 0.0 <= bm.utilization() <= 1.0
+        for rid in live:
+            bm.free(rid)
+        assert bm.free_blocks == num_blocks
+        bm.check()
+
+
+# ---------------------------------------------------------------------------
+# paged pool gather shim
+# ---------------------------------------------------------------------------
+
+class TestPagedGatherShim:
+    def test_scatter_gather_round_trip(self):
+        from repro.models.attention import (KVCache, gather_block_kv,
+                                            paged_kv_pool, scatter_block_kv)
+        kvh, bs, hd = 2, 8, 4
+        rng = np.random.default_rng(0)
+        pool_k, pool_v = paged_kv_pool(6, bs, kvh, hd)
+        s = 3 * bs
+        cache = KVCache(jnp.asarray(rng.standard_normal((1, kvh, s, hd)),
+                                    jnp.float32),
+                        jnp.asarray(rng.standard_normal((1, kvh, s, hd)),
+                                    jnp.float32),
+                        jnp.asarray(s, jnp.int32))
+        table = [4, 1, 3]                        # deliberately non-contiguous
+        pool_k, pool_v = scatter_block_kv(pool_k, pool_v, cache, table)
+        back = gather_block_kv(pool_k, pool_v, table, s)
+        assert np.array_equal(np.asarray(back.k), np.asarray(cache.k))
+        assert np.array_equal(np.asarray(back.v), np.asarray(cache.v))
+        assert int(back.length) == s
+        # untouched blocks stay zero
+        assert float(jnp.abs(pool_k[0]).sum()) == 0.0
+
+    def test_short_cache_pads_last_block(self):
+        from repro.models.attention import (KVCache, gather_block_kv,
+                                            paged_kv_pool, scatter_block_kv)
+        pool_k, pool_v = paged_kv_pool(4, 8, 1, 4)
+        cache = KVCache(jnp.ones((1, 1, 11, 4), jnp.float32),
+                        jnp.ones((1, 1, 11, 4), jnp.float32),
+                        jnp.asarray(11, jnp.int32))
+        pool_k, pool_v = scatter_block_kv(pool_k, pool_v, cache, [2, 0])
+        back = gather_block_kv(pool_k, pool_v, [2, 0], 11)
+        assert back.k.shape == (1, 1, 16, 4)
+        assert np.array_equal(np.asarray(back.k[:, :, :11]),
+                              np.asarray(cache.k))
+        assert float(jnp.abs(back.k[:, :, 11:]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler over the real model
+# ---------------------------------------------------------------------------
+
+class TestSchedulerModelBackend:
+    def test_join_evict_streams_bit_exact_vs_single_request(self, tiny_model):
+        """Requests joining and leaving the running batch mid-decode must
+        not perturb any stream: every request's tokens equal its own
+        single-request Engine.generate output."""
+        model, params = tiny_model
+        prompts = {
+            "a": jnp.asarray([[1, 2, 3, 4, 5]], jnp.int32),
+            "b": jnp.asarray([[9, 8, 7]], jnp.int32),
+            "c": jnp.asarray([[11, 12, 13, 14, 15, 16, 17]], jnp.int32),
+        }
+        new_tokens = {"a": 6, "b": 4, "c": 5}
+        ref = {}
+        for rid, p in prompts.items():
+            eng = Engine(model, params,
+                         ServeConfig(max_new_tokens=new_tokens[rid],
+                                     max_cache_len=64))
+            ref[rid] = np.asarray(eng.generate(p))[0, p.shape[1]:]
+
+        backend = ModelBackend(model, params, max_cache_len=64)
+        cost = cost_model_for(model.cfg, CPU_HOST)
+        sched = Scheduler(backend, cost,
+                          SchedulerConfig(max_cache_len=64, max_batch=4),
+                          policy=ModelGuidedPolicy(step_budget_s=0.05))
+        sched.submit(Request(rid="a", prompt=prompts["a"],
+                             max_new_tokens=new_tokens["a"]))
+        sched.step()                 # a mid-stream before b exists
+        sched.step()
+        sched.submit(Request(rid="b", prompt=prompts["b"],
+                             max_new_tokens=new_tokens["b"]))
+        sched.step()                 # b joins while a decodes
+        sched.submit(Request(rid="c", prompt=prompts["c"],
+                             max_new_tokens=new_tokens["c"]))
+        sched.run()                  # b evicts first, then a, then c
+        assert sched.idle and not sched.active
+        from repro.serving.scheduler import token_int
+        for rid in prompts:
+            got = np.asarray([token_int(t) for t in sched.finished[rid].out])
+            assert np.array_equal(got, ref[rid]), rid
+        # every block returned to the pool on eviction
+        assert sched.blocks.free_blocks == sched.cfg.num_blocks
+
+    def test_no_wasted_final_decode_step(self, tiny_model):
+        """Generating m tokens takes exactly m-1 decode token-steps (the
+        first token comes from prefill logits) and prefill covers the
+        prompt exactly once."""
+        model, params = tiny_model
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        m = 5
+        backend = ModelBackend(model, params, max_cache_len=32)
+        sched = Scheduler(backend, cost_model_for(model.cfg, CPU_HOST),
+                          SchedulerConfig(max_cache_len=32, max_batch=2))
+        sched.submit(Request(rid="x", prompt=prompt, max_new_tokens=m))
+        reports = sched.run()
+        decode_token_steps = sum(len(r.plan.decode) for r in reports)
+        prefill_tokens = sum(n for r in reports for _, n in r.plan.prefill)
+        assert decode_token_steps == m - 1
+        assert prefill_tokens == prompt.shape[1]
+        assert len(sched.finished["x"].out) == m
+
+    def test_eos_stops_generation_early_and_pads(self, tiny_model):
+        model, params = tiny_model
+        prompt = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
+        s = prompt.shape[1]
+        ref = np.asarray(Engine(model, params,
+                                ServeConfig(max_new_tokens=6,
+                                            max_cache_len=64))
+                         .generate(prompt))
+        eos = int(ref[0, s + 2])                 # third generated token
+        eng = Engine(model, params,
+                     ServeConfig(max_new_tokens=6, max_cache_len=64,
+                                 eos_id=eos))
+        out = np.asarray(eng.generate(prompt))
+        assert out.shape == ref.shape
+        # identical stream up to and including the stop token...
+        assert np.array_equal(out[0, :s + 3], ref[0, :s + 3])
+        # ...then padding, and the scheduler recorded an early stop
+        assert (out[0, s + 3:] == eos).all()
+
+    def test_engine_cfg_default_not_shared(self, tiny_model):
+        model, params = tiny_model
+        e1 = Engine(model, params)
+        e2 = Engine(model, params)
+        assert e1.cfg is not e2.cfg
+        e1.cfg.max_new_tokens = 7
+        assert e2.cfg.max_new_tokens == 32
+
+
+# ---------------------------------------------------------------------------
+# simulated scheduling + policy contrast
+# ---------------------------------------------------------------------------
+
+class TestSimulatedScheduling:
+    def test_sim_run_completes_and_frees_blocks(self):
+        cfg = get("qwen1.5-4b").reduced()
+        cost = cost_model_for(cfg, CPU_HOST)
+        sched = Scheduler(SimBackend(), cost,
+                          SchedulerConfig(max_cache_len=256, max_batch=4))
+        for i, (plen, out) in enumerate([(12, 4), (30, 6), (7, 2), (50, 5)]):
+            sched.submit(Request(rid=f"s{i}", prompt_len=plen,
+                                 max_new_tokens=out, output_len=out,
+                                 eos_id=1, arrival_s=0.05 * i))
+        sched.run()
+        assert len(sched.finished) == 4
+        assert sched.blocks.free_blocks == sched.cfg.num_blocks
+        expected = {f"s{i}": out
+                    for i, (_, out) in enumerate([(12, 4), (30, 6),
+                                                  (7, 2), (50, 5)])}
+        for m in sched.request_metrics():
+            assert m["n_out"] == expected[m["rid"]]
+            assert m["finish_s"] >= m["first_token_s"] >= m["admitted_s"]
+            assert m["ttft_s"] > 0
+
+    def test_model_guided_beats_fifo_on_skewed_trace(self):
+        """The acceptance contrast, small scale: same skewed trace, same
+        cost model — the model-guided policy must match FIFO goodput and
+        strictly beat its p95 TTFT."""
+        cfg = get("qwen1.5-4b").reduced()
+        cost = cost_model_for(cfg, CPU_HOST)
+        trace = synthesize_trace(TraceConfig(n_requests=500, seed=2,
+                                             arrival_rate=8.0))
+        reps = compare_policies(trace, cost, step_budget_s=0.06)
+        fifo, model = reps["fifo"], reps["model"]
+        assert fifo.n_finished == model.n_finished == 500
+        assert model.goodput_rps >= fifo.goodput_rps
+        assert model.ttft_p95_s < fifo.ttft_p95_s
+
+    def test_duplicate_rid_rejected(self):
+        cfg = get("qwen1.5-4b").reduced()
+        sched = Scheduler(SimBackend(), cost_model_for(cfg, CPU_HOST),
+                          SchedulerConfig())
+        sched.submit(Request(rid="dup", prompt_len=4, max_new_tokens=2))
+        with pytest.raises(KeyError):
+            sched.submit(Request(rid="dup", prompt_len=4, max_new_tokens=2))
+
+
+# ---------------------------------------------------------------------------
+# cost model: fingerprint keying + refit
+# ---------------------------------------------------------------------------
+
+class TestServingCost:
+    def test_predictions_positive_and_batch_economical(self):
+        cfg = get("qwen1.5-4b").reduced()
+        cm = ServeCostModel(cfg, CPU_HOST)
+        one = cm.decode_step([128]).decode_s
+        eight = cm.decode_step([128] * 8).decode_s
+        assert 0 < one < eight < 8 * one     # weights read once, shared
+
+    def test_cost_cache_rekeys_on_revision_bump(self):
+        cfg = get("qwen1.5-4b").reduced()
+        base = cost_model_for(cfg, CPU_HOST)
+        install_scales(cfg, CPU_HOST,
+                       ServeScales(prefill_scale=3.0, decode_scale=3.0,
+                                   overhead_s=base.scales.overhead_s))
+        assert cost_model_for(cfg, CPU_HOST).scales.prefill_scale == 3.0
+        bumped = dataclasses.replace(CPU_HOST, revision=CPU_HOST.revision + 1)
+        fresh = cost_model_for(cfg, bumped)
+        assert fresh.scales.prefill_scale == 1.0   # stale table not recalled
+        # old-revision fingerprint still holds the refit table
+        assert cost_model_for(cfg, CPU_HOST).scales.prefill_scale == 3.0
+
+    def _serve_records(self, cm, *, a_pf, a_dc, b):
+        recs = []
+        rng = np.random.default_rng(0)
+        for i in range(24):
+            chunks = [(int(rng.integers(8, 200)), int(rng.integers(0, 64)))]
+            ctxs = list(rng.integers(16, 256, size=int(rng.integers(1, 8))))
+            pred = cm.predict_step(chunks, ctxs)
+            recs.append(RunRecord(
+                fingerprint="f", machine=cm.machine.name, op="serve_step",
+                variant="model", n=chunks[0][0], p=len(ctxs), c=1,
+                kind="serve_step",
+                phases={"prefill": a_pf * pred.prefill_s + b,
+                        "decode": a_dc * pred.decode_s + b},
+                predicted={"prefill": pred.prefill_s,
+                           "decode": pred.decode_s,
+                           "total": pred.total_s}))
+        return recs
+
+    def test_refit_serving_reduces_error(self):
+        cfg = get("qwen1.5-4b").reduced()
+        cm = ServeCostModel(cfg, CPU_HOST)
+        recs = self._serve_records(cm, a_pf=1.8, a_dc=2.6, b=2e-4)
+        refit = refit_serving(recs, cm)
+        assert refit.n_rows == 48
+        assert refit.mean_rel_err_before > 0.4
+        assert refit.mean_rel_err_after < 0.1
+        assert refit.mean_rel_err_after < refit.mean_rel_err_before
+        # calibrated model predicts the measured world
+        cal = cm.with_scales(refit.scales)
+        pred = cal.decode_step([100] * 4).decode_s
+        raw = cm.decode_step([100] * 4).decode_s
+        meas = 2.6 * raw + 2e-4
+        assert abs(pred - meas) / meas < 0.25
+
+    def test_serve_step_records_self_join_in_residuals(self):
+        from repro.telemetry import residuals
+        from repro.telemetry.report import accuracy_report
+        cfg = get("qwen1.5-4b").reduced()
+        cm = ServeCostModel(cfg, CPU_HOST)
+        recs = self._serve_records(cm, a_pf=1.0, a_dc=1.0, b=0.0)
+        rows = residuals.join(recs)
+        assert len(rows) == 48
+        assert all(r.source == "serve" for r in rows)
+        assert all(abs(r.rel_err) < 1e-9 for r in rows)
+        # the CI accuracy gate aggregates only source="model" rows
+        rep = accuracy_report(rows)
+        assert rep["overall"]["n_rows"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tuner serve_chunk
+# ---------------------------------------------------------------------------
+
+class TestServeChunk:
+    def test_chunk_respects_budget_and_granularity(self):
+        from repro.tuner import default_tuner
+        cfg = get("qwen1.5-4b").reduced()
+        cm = ServeCostModel(cfg, CPU_HOST)
+        t = default_tuner()
+        whole = cm.prefill_step([(512, 0)]).prefill_s
+        n = t.serve_chunk(512, ctx0=0, cost=cm, budget_s=whole * 2,
+                          granularity=32)
+        assert n == 512                          # generous budget: whole
+        n = t.serve_chunk(512, ctx0=0, cost=cm, budget_s=whole / 4,
+                          granularity=32)
+        assert 0 < n < 512 and n % 32 == 0
+        assert cm.prefill_step([(n, 0)]).prefill_s <= whole / 4
+        assert t.serve_chunk(512, ctx0=0, cost=cm, budget_s=0.0,
+                             granularity=32) == 0
