@@ -78,7 +78,27 @@ def main() -> dict:
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
+    # --- disabled-path overhead ------------------------------------------
+    # The hot-path guard (enabled() + a no-op phase_scope) is what every
+    # dispatch pays when recording is off; it must stay sub-microsecond.
+    from repro.telemetry import phase_scope
+    telemetry.disable()
+    try:
+        n_calls = 200_000
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            if telemetry.enabled():
+                pass
+            with phase_scope(None, "execute"):
+                pass
+        disabled_us = (time.perf_counter() - t0) / n_calls * 1e6
+    finally:
+        telemetry.reset()
+    assert disabled_us < 1.0, (
+        f"disabled telemetry path costs {disabled_us:.3f}us/call (>= 1us)")
+
     return {
+        "disabled_path_us_per_call": disabled_us,
         "runs": n_runs,
         "scenarios": len(scenarios),
         "record_runs_per_sec": n_runs / record_s,

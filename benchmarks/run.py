@@ -188,6 +188,18 @@ def bench_kernels():
              "interpret-mode (CPU validation; TPU is the target)")
 
 
+def bench_obs():
+    t0 = time.perf_counter()
+    from benchmarks.bench_obs import main as obs_bench
+    res = obs_bench()
+    _save("BENCH_obs", res)
+    emit("obs_tracing", (time.perf_counter() - t0) * 1e6,
+         f"spans={res['spans_per_sec']:.0f}/s "
+         f"overhead={res['enabled_overhead_pct']:.2f}% "
+         f"export10k={res['export_10k_span_ms']:.0f}ms "
+         f"flow_events={res['serving_trace_flow_events']}")
+
+
 def bench_serving():
     t0 = time.perf_counter()
     from benchmarks.bench_serving import main as serve
@@ -216,6 +228,7 @@ BENCHES = {
     "sim_scale": bench_sim_scale,
     "telemetry": bench_telemetry,
     "serving": bench_serving,
+    "obs": bench_obs,
 }
 
 

@@ -18,4 +18,4 @@ from .policy import FIFOPolicy, ModelGuidedPolicy, Policy, StepPlan, make_policy
 from .scheduler import (ModelBackend, Request, Scheduler, SchedulerConfig,
                         SimBackend, build_scheduler)
 from .trace import (ReplayReport, TraceConfig, compare_policies, replay,
-                    replay_for, synthesize_trace)
+                    replay_for, replay_traced, synthesize_trace)

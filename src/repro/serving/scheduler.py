@@ -39,6 +39,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .cost import ServeCostModel, ServeStepCost, cost_model_for
 from .kvblocks import BlockManager, blocks_for
 from .policy import FIFOPolicy, Policy, StepPlan, make_policy
+from .. import obs
 
 
 def token_int(tok) -> int:
@@ -157,6 +158,14 @@ class StepReport:
     measured_decode_s: float
     admitted: List[str]
     finished: List[str]
+    # post-step system state (queue/KV/batch composition — what the obs
+    # gauges and the serving trace's counter tracks are drawn from)
+    queue_depth: int = 0
+    active: int = 0
+    kv_blocks_used: int = 0
+    kv_blocks_total: int = 0
+    prefill_tokens: int = 0
+    decode_batch: int = 0
 
 
 @dataclasses.dataclass
@@ -181,7 +190,9 @@ class Scheduler:
     def __init__(self, backend, cost: ServeCostModel,
                  cfg: Optional[SchedulerConfig] = None, *,
                  policy: Optional[Policy] = None,
-                 phase_timer=None):
+                 phase_timer=None, metrics=None,
+                 ttft_slo_s: Optional[float] = None,
+                 tpot_slo_s: Optional[float] = None):
         self.backend = backend
         self.cost = cost
         self.cfg = (cfg or SchedulerConfig()).resolve()
@@ -195,6 +206,12 @@ class Scheduler:
         self._arrivals: List[Tuple[float, int, RequestState]] = []  # heap
         self._seq = itertools.count()
         self._outer_pt = phase_timer      # engine-level serve record
+        # metrics: an explicit registry wins; else the obs default when
+        # tracing is on; else nothing (zero overhead)
+        self.metrics = metrics
+        self.ttft_slo_s = ttft_slo_s
+        self.tpot_slo_s = tpot_slo_s
+        self._mh: Dict[str, object] = {}  # cached metric handles
 
     # -- submission ---------------------------------------------------------
     def submit(self, req: Request) -> str:
@@ -225,56 +242,122 @@ class Scheduler:
     def step(self) -> Optional[StepReport]:
         """Admit, compose, execute, account, evict.  Returns None when
         there is nothing at all left to do."""
+        tr = obs.tracer() if obs.enabled() else None
+        return self._step_impl(tr)
+
+    def _step_impl(self, tr) -> Optional[StepReport]:
         self._drain_arrivals()
+        # one logical step = one root span (the fast-forward recursion
+        # below closes its own zero-duration marker first)
+        sp = None
+        if tr is not None:
+            sp = tr.begin("serve:step", cat="serve_step",
+                          args={"step": self.steps,
+                                "policy": self.policy.name})
+        try:
+            t_adm = time.perf_counter()
+            admitted = self._admit()
+            if tr is not None:
+                tr.complete("admit", time.perf_counter() - t_adm,
+                            cat="serve",
+                            args={"n_admitted": len(admitted),
+                                  "queue_depth": len(self.waiting)})
+            t_cmp = time.perf_counter()
+            plan = self.policy.compose(list(self.active.values()), self.cost,
+                                       max_batch=self.cfg.max_batch)
+            if tr is not None:
+                tr.complete(
+                    "compose", time.perf_counter() - t_cmp, cat="serve",
+                    args={"prefill_tokens": sum(n for _, n in plan.prefill),
+                          "decode_batch": len(plan.decode)})
+            if plan.empty:
+                if self._arrivals:          # fast-forward to next arrival
+                    if sp is not None:
+                        sp.args["fast_forward"] = True
+                        tr.end(sp, dur_s=0.0)
+                        sp = None           # closed; recursion owns its own
+                    self.clock = self._arrivals[0][0]
+                    return self._step_impl(tr)
+                if sp is not None:
+                    sp.args["idle"] = True
+                    tr.end(sp, dur_s=0.0)
+                return None
 
-        admitted = self._admit()
-        plan = self.policy.compose(list(self.active.values()), self.cost,
-                                   max_batch=self.cfg.max_batch)
-        if plan.empty:
-            if self._arrivals:              # fast-forward to next arrival
-                self.clock = self._arrivals[0][0]
-                return self.step()
-            return None
+            prefill_entries = [(n, self.active[rid].prefill_pos)
+                               for rid, n in plan.prefill]
+            decode_ctx = [self.active[rid].context_len for rid in plan.decode]
+            predicted = self.cost.predict_step(prefill_entries, decode_ctx)
 
-        prefill_entries = [(n, self.active[rid].prefill_pos)
-                           for rid, n in plan.prefill]
-        decode_ctx = [self.active[rid].context_len for rid in plan.decode]
-        predicted = self.cost.predict_step(prefill_entries, decode_ctx)
+            timed = self._timed()
+            t0 = time.perf_counter()
+            ex = self.backend.execute(plan, self.active, timed=timed)
+            wall = time.perf_counter() - t0
 
-        timed = self._timed()
-        t0 = time.perf_counter()
-        ex = self.backend.execute(plan, self.active, timed=timed)
-        wall = time.perf_counter() - t0
+            # clock: measured wall for real execution, prediction for
+            # simulation
+            if self.backend.measures:
+                advance = (ex.prefill_s + ex.decode_s) if timed else wall
+            else:
+                advance = predicted.total_s
+            self.clock += advance
 
-        # clock: measured wall for real execution, prediction for simulation
-        if self.backend.measures:
-            self.clock += (ex.prefill_s + ex.decode_s) if timed else wall
-        else:
-            self.clock += predicted.total_s
+            # account prefill progress, then tokens / completions
+            for rid, n in plan.prefill:
+                rs = self.active[rid]
+                rs.prefill_pos += n
+                self.blocks.append_tokens(rid, n)
+            finished: List[str] = []
+            for rid, tok in ex.tokens.items():
+                rs = self.active[rid]
+                rs.out.append(tok)
+                self.blocks.append_tokens(rid, 1)
+                if rs.first_token_s is None:
+                    rs.first_token_s = self.clock
+                self._maybe_finish(rs, tok)
+                if rs.finish_s is not None:
+                    finished.append(rid)
+            for rid in finished:
+                self._evict(rid)
 
-        # account prefill progress, then tokens / completions
-        for rid, n in plan.prefill:
-            rs = self.active[rid]
-            rs.prefill_pos += n
-            self.blocks.append_tokens(rid, n)
-        finished: List[str] = []
-        for rid, tok in ex.tokens.items():
-            rs = self.active[rid]
-            rs.out.append(tok)
-            self.blocks.append_tokens(rid, 1)
-            if rs.first_token_s is None:
-                rs.first_token_s = self.clock
-            self._maybe_finish(rs, tok)
-            if rs.finish_s is not None:
-                finished.append(rid)
-        for rid in finished:
-            self._evict(rid)
-
-        self.steps += 1
-        self._record(plan, predicted, ex, timed)
-        return StepReport(self.steps - 1, self.clock, plan, predicted,
-                          ex.prefill_s, ex.decode_s,
-                          [r.rid for r in admitted], finished)
+            self.steps += 1
+            self._record(plan, predicted, ex, timed)
+            rep = StepReport(
+                self.steps - 1, self.clock, plan, predicted,
+                ex.prefill_s, ex.decode_s,
+                [r.rid for r in admitted], finished,
+                queue_depth=len(self.waiting), active=len(self.active),
+                kv_blocks_used=self.blocks.used_blocks,
+                kv_blocks_total=self.blocks.num_blocks,
+                prefill_tokens=sum(n for _, n in plan.prefill),
+                decode_batch=len(plan.decode))
+            self._observe_step(rep)
+            if tr is not None:
+                # per-phase children pair with the cost model's split; the
+                # root pairs with the predicted step total.  Simulated
+                # phases measure as their predictions (residual 0) — real
+                # backends carry true residuals.
+                meas = self.backend.measures
+                pf = ex.prefill_s if meas else predicted.prefill_s
+                dc = ex.decode_s if meas else predicted.decode_s
+                if plan.prefill:
+                    tr.complete("prefill", pf, cat="serve_step",
+                                predicted_s=predicted.prefill_s,
+                                args={"tokens": rep.prefill_tokens})
+                if plan.decode:
+                    tr.complete("decode", dc, cat="serve_step",
+                                predicted_s=predicted.decode_s,
+                                args={"batch": rep.decode_batch})
+                sp.predicted_s = predicted.total_s
+                sp.args.update(admitted=len(admitted),
+                               finished=len(finished),
+                               decode_batch=rep.decode_batch,
+                               prefill_tokens=rep.prefill_tokens)
+                tr.end(sp, dur_s=advance)
+            return rep
+        except BaseException:
+            if sp is not None:
+                tr.end(sp, error=True)
+            raise
 
     def run(self, max_steps: Optional[int] = None) -> List[StepReport]:
         reports = []
@@ -320,6 +403,71 @@ class Scheduler:
         self.blocks.free(rid)
         self.backend.release(rid)
         self.finished[rid] = rs
+        reg = self._registry()
+        if reg is not None:
+            h = self._ensure_handles(reg)
+            m = rs.metrics()
+            h["finished"].inc()
+            h["tokens"].inc(m["n_out"])
+            h["last_finish"].set(rs.finish_s)
+            if m["ttft_s"] is not None:
+                h["ttft"].observe(m["ttft_s"])
+            if m["n_out"] > 1:
+                h["tpot"].observe(m["tpot_s"])
+            if self.ttft_slo_s is not None:
+                met = (m["ttft_s"] is not None
+                       and m["ttft_s"] <= self.ttft_slo_s
+                       and (m["n_out"] <= 1 or self.tpot_slo_s is None
+                            or m["tpot_s"] <= self.tpot_slo_s))
+                if met:
+                    h["slo_met"].inc()
+
+    # -- metrics --------------------------------------------------------------
+    def _registry(self):
+        if self.metrics is not None:
+            return self.metrics
+        if obs.enabled():
+            return obs.default_registry()
+        return None
+
+    def _ensure_handles(self, reg) -> Dict[str, object]:
+        h = self._mh
+        if h.get("_reg") is not reg:
+            pol = self.policy.name
+            h.clear()
+            h["_reg"] = reg
+            h["steps"] = reg.counter("serve_steps_total", policy=pol)
+            h["finished"] = reg.counter("serve_finished_total", policy=pol)
+            h["tokens"] = reg.counter("serve_tokens_out_total", policy=pol)
+            h["slo_met"] = reg.counter("serve_slo_met_total", policy=pol)
+            h["queue"] = reg.gauge("serve_queue_depth", policy=pol)
+            h["active"] = reg.gauge("serve_active_requests", policy=pol)
+            h["kv_used"] = reg.gauge("serve_kv_blocks_used", policy=pol)
+            h["kv_util"] = reg.gauge("serve_kv_utilization", policy=pol)
+            h["batch"] = reg.gauge("serve_decode_batch", policy=pol)
+            h["pf_tok"] = reg.gauge("serve_prefill_tokens", policy=pol)
+            h["last_finish"] = reg.gauge("serve_last_finish_s", policy=pol)
+            # keep_values: exact nearest-rank percentiles, so the replay
+            # report and the obs summary agree by construction
+            h["ttft"] = reg.histogram("serve_ttft_s", keep_values=True,
+                                      policy=pol)
+            h["tpot"] = reg.histogram("serve_tpot_s", keep_values=True,
+                                      policy=pol)
+        return h
+
+    def _observe_step(self, rep: StepReport) -> None:
+        reg = self._registry()
+        if reg is None:
+            return
+        h = self._ensure_handles(reg)
+        h["steps"].inc()
+        h["queue"].set(rep.queue_depth)
+        h["active"].set(rep.active)
+        h["kv_used"].set(rep.kv_blocks_used)
+        h["kv_util"].set(rep.kv_blocks_used / rep.kv_blocks_total
+                         if rep.kv_blocks_total else 0.0)
+        h["batch"].set(rep.decode_batch)
+        h["pf_tok"].set(rep.prefill_tokens)
 
     def _timed(self) -> bool:
         if not self.backend.measures:
@@ -585,7 +733,9 @@ def build_scheduler(model=None, params=None, *, cfg_model=None,
                     machine=None, scheduler_cfg: Optional[SchedulerConfig] = None,
                     policy: str = "fifo", step_budget_s: Optional[float] = None,
                     backend: Optional[Any] = None, tuner=None,
-                    phase_timer=None) -> Scheduler:
+                    phase_timer=None, metrics=None,
+                    ttft_slo_s: Optional[float] = None,
+                    tpot_slo_s: Optional[float] = None) -> Scheduler:
     """Convenience constructor.  With ``model``/``params``: real execution
     (:class:`ModelBackend`); without: cost-model simulation
     (:class:`SimBackend`).  ``cfg_model`` is the ModelConfig the cost
@@ -606,4 +756,5 @@ def build_scheduler(model=None, params=None, *, cfg_model=None,
             backend = SimBackend()
     pol = make_policy(policy, step_budget_s=step_budget_s, tuner=tuner)
     return Scheduler(backend, cost, scfg, policy=pol,
-                     phase_timer=phase_timer)
+                     phase_timer=phase_timer, metrics=metrics,
+                     ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)

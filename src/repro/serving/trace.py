@@ -22,13 +22,16 @@ model, the comparison isolates scheduling policy from prediction error.
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.machine import CPU_HOST, Machine
+from ..obs import MetricsRegistry
 from .cost import ServeCostModel, cost_model_for
 from .policy import make_policy
-from .scheduler import Request, Scheduler, SchedulerConfig, SimBackend
+from .scheduler import (Request, Scheduler, SchedulerConfig, SimBackend,
+                        StepReport)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,32 +101,25 @@ class ReplayReport:
         return dataclasses.asdict(self)
 
 
-def replay(trace: Sequence[Request], cost: ServeCostModel, *,
-           policy: str = "fifo",
-           scheduler_cfg: Optional[SchedulerConfig] = None,
-           step_budget_s: Optional[float] = None,
-           ttft_slo_s: Optional[float] = None,
-           tpot_slo_s: Optional[float] = None,
-           max_steps: Optional[int] = None) -> ReplayReport:
-    """Replay ``trace`` under ``policy`` on a simulated clock.
+def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
+                  policy: str = "fifo",
+                  scheduler_cfg: Optional[SchedulerConfig] = None,
+                  step_budget_s: Optional[float] = None,
+                  ttft_slo_s: Optional[float] = None,
+                  tpot_slo_s: Optional[float] = None,
+                  max_steps: Optional[int] = None,
+                  metrics: Optional[MetricsRegistry] = None,
+                  ) -> Tuple[ReplayReport, List[StepReport],
+                             MetricsRegistry]:
+    """:func:`replay`, returning also the per-step reports and the
+    metrics registry the run was accounted through — the inputs
+    ``obs.serving_trace`` / ``obs.summary`` want.
 
     SLO defaults are derived from the cost model so they track the
     machine: TTFT SLO = predicted whole-prefill time of a tail-length
-    prompt plus slack; TPOT SLO = 4x a lightly-batched decode step."""
-    pol = make_policy(policy, step_budget_s=step_budget_s)
-    sched = Scheduler(SimBackend(), cost,
-                      scheduler_cfg or SchedulerConfig(), policy=pol)
-    for req in trace:
-        sched.submit(dataclasses.replace(req))
-    reports = sched.run(max_steps=max_steps)
-
-    metrics = sched.request_metrics()
-    ttft = [m["ttft_s"] for m in metrics if m["ttft_s"] is not None]
-    tpot = [m["tpot_s"] for m in metrics if m["n_out"] > 1]
-    tokens_out = sum(m["n_out"] for m in metrics)
-    makespan = max((m["finish_s"] for m in metrics
-                    if m["finish_s"] is not None), default=0.0)
-
+    prompt plus slack; TPOT SLO = 6x a lightly-batched decode step.
+    They are resolved *before* the run so the scheduler streams the
+    SLO-met accounting into the registry as requests finish."""
     if ttft_slo_s is None:
         tail = max((r.prompt_len for r in trace), default=256)
         ttft_slo_s = 2.0 * cost.request_prefill_cost(tail) + 0.5
@@ -131,20 +127,45 @@ def replay(trace: Sequence[Request], cost: ServeCostModel, *,
         # tolerate budget-bounded interleaving (a decode stream's token
         # time is the whole step it rides in), punish whole-prompt stalls
         tpot_slo_s = 6.0 * cost.decode_step([256] * 8).decode_s
+    reg = metrics if metrics is not None else MetricsRegistry()
+    pol = make_policy(policy, step_budget_s=step_budget_s)
+    sched = Scheduler(SimBackend(), cost,
+                      scheduler_cfg or SchedulerConfig(), policy=pol,
+                      metrics=reg, ttft_slo_s=ttft_slo_s,
+                      tpot_slo_s=tpot_slo_s)
+    for req in trace:
+        sched.submit(dataclasses.replace(req))
+    reports = sched.run(max_steps=max_steps)
 
-    met = sum(1 for m in metrics
-              if m["ttft_s"] is not None and m["ttft_s"] <= ttft_slo_s
-              and (m["n_out"] <= 1 or m["tpot_s"] <= tpot_slo_s))
-    return ReplayReport(
-        policy=pol.name, n_requests=len(trace), n_finished=len(metrics),
+    # the report is read *from the registry* — the same counters and
+    # keep_values histograms the obs summary exposes, so the two cannot
+    # disagree
+    name = pol.name
+    ttft_h = reg.histogram("serve_ttft_s", keep_values=True, policy=name)
+    tpot_h = reg.histogram("serve_tpot_s", keep_values=True, policy=name)
+    n_finished = int(reg.counter("serve_finished_total", policy=name).value)
+    tokens_out = int(reg.counter("serve_tokens_out_total", policy=name).value)
+    met = int(reg.counter("serve_slo_met_total", policy=name).value)
+    last = reg.gauge("serve_last_finish_s", policy=name)
+    makespan = last.max_value if last.max_value > -math.inf else 0.0
+    rep = ReplayReport(
+        policy=name, n_requests=len(trace), n_finished=n_finished,
         makespan_s=makespan, steps=len(reports), tokens_out=tokens_out,
-        ttft_p50_s=_percentile(ttft, 50), ttft_p95_s=_percentile(ttft, 95),
-        ttft_p99_s=_percentile(ttft, 99),
-        tpot_p50_s=_percentile(tpot, 50), tpot_p95_s=_percentile(tpot, 95),
+        ttft_p50_s=ttft_h.percentile(50), ttft_p95_s=ttft_h.percentile(95),
+        ttft_p99_s=ttft_h.percentile(99),
+        tpot_p50_s=tpot_h.percentile(50), tpot_p95_s=tpot_h.percentile(95),
         goodput_rps=met / makespan if makespan > 0 else 0.0,
         throughput_tok_s=tokens_out / makespan if makespan > 0 else 0.0,
-        slo_met_fraction=met / len(metrics) if metrics else 0.0,
+        slo_met_fraction=met / n_finished if n_finished else 0.0,
         ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+    return rep, reports, reg
+
+
+def replay(trace: Sequence[Request], cost: ServeCostModel,
+           **kwargs) -> ReplayReport:
+    """Replay ``trace`` under ``policy`` on a simulated clock; see
+    :func:`replay_traced` (this is its report-only form)."""
+    return replay_traced(trace, cost, **kwargs)[0]
 
 
 def compare_policies(trace: Sequence[Request], cost: ServeCostModel, *,

@@ -98,36 +98,20 @@ class SimResult:
         }
 
     # -- Chrome trace --------------------------------------------------------
-    def chrome_trace(self, max_ranks: int = 64) -> dict:
-        """Trace-event JSON: one ``tid`` per rank (phases as complete
-        events), capped at ``max_ranks`` tracks, plus process metadata and
-        a counter track of per-phase makespan."""
-        scale = 1e6  # seconds -> microseconds
-        ranks = range(min(self.p, max_ranks))
-        events: List[dict] = [{
-            "name": "process_name", "ph": "M", "pid": 0,
-            "args": {"name": f"{self.algo}/{self.variant} on {self.topology}"
-                             f" (n={self.n:g}, p={self.p})"},
-        }]
-        cr = self.critical_rank
-        for rk in ranks:
-            events.append({"name": "thread_name", "ph": "M", "pid": 0,
-                           "tid": rk,
-                           "args": {"name": f"rank {rk}"
-                                    + (" [critical]" if rk == cr else "")}})
-        for name, ph in self.phases.items():
-            for rk in ranks:
-                dur = float(ph.exposed[rk]) * scale
-                if dur <= 0:
-                    continue
-                events.append({"name": name, "ph": "X", "pid": 0, "tid": rk,
-                               "ts": float(ph.start[rk]) * scale, "dur": dur,
-                               "cat": "phase"})
-        return {"traceEvents": events, "displayTimeUnit": "ms",
-                "otherData": self.summary()}
+    def chrome_trace(self, max_ranks: int = 64, eval_result=None) -> dict:
+        """Trace-event JSON through the unified obs exporter: one ``tid``
+        per rank (phases as complete events), plus process metadata.
+        Capping at ``max_ranks`` tracks is *announced*: a warning is
+        logged and ``otherData`` carries ``ranks_shown``/``ranks_dropped``.
+        With ``eval_result`` (the model's :class:`~repro.perf.evaluate`
+        ``EvalResult`` for the same scenario) predicted per-phase spans
+        appear on a paired track, flow-linked to the critical rank with
+        signed residual annotations."""
+        from ..obs import sim_trace
+        return sim_trace(self, max_ranks=max_ranks, eval_result=eval_result)
 
     def dump_chrome_trace(self, path: Optional[str] = None,
-                          max_ranks: int = 64) -> str:
+                          max_ranks: int = 64, eval_result=None) -> str:
         """Write the trace under ``artifacts/traces/`` (or ``path``) and
         return the file path."""
         if path is None:
@@ -137,5 +121,6 @@ class SimResult:
                 f"{self.algo}_{safe_v}_n{int(self.n)}_p{self.p}.json")
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:
-            json.dump(self.chrome_trace(max_ranks=max_ranks), f)
+            json.dump(self.chrome_trace(max_ranks=max_ranks,
+                                        eval_result=eval_result), f)
         return path

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.machine import Machine
+from .. import obs
 from .residuals import Residual
 
 #: default rolling window (rows per op) and mean-relative-error threshold.
@@ -62,9 +63,16 @@ def check(rows: Sequence[Residual], *, threshold: float = DEFAULT_THRESHOLD,
         op_rows.sort(key=lambda r: r.timestamp)
         tail = op_rows[-window:]
         err = float(np.mean([r.rel_err for r in tail]))
-        out[op] = DriftStatus(op=op, rolling_mean_rel_err=err,
-                              n_rows=len(tail), window=window,
-                              threshold=threshold)
+        st = DriftStatus(op=op, rolling_mean_rel_err=err,
+                         n_rows=len(tail), window=window,
+                         threshold=threshold)
+        out[op] = st
+        if st.drifted:
+            # structured alert into the obs stream (instant event +
+            # obs_alerts_total counter); no-op when tracing is off
+            obs.alert("drift", op=op, rolling_mean_rel_err=err,
+                      threshold=threshold, window=window,
+                      n_rows=st.n_rows)
     return out
 
 

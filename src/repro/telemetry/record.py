@@ -25,17 +25,24 @@ from contextlib import contextmanager, nullcontext
 from typing import Dict, Optional
 
 from .store import RunRecord, RunStore
+from .. import obs
 
 _STATE_LOCK = threading.Lock()
 _ENABLED: Optional[bool] = None          # None: fall back to the env var
 _STORE: Optional[RunStore] = None
 
+#: one reusable no-op context for every disabled phase_scope call — the
+#: disabled hot path must not allocate (bench_telemetry asserts < 1 µs).
+_NULL = nullcontext()
+
 
 def enabled() -> bool:
-    """True when measured runs should be recorded globally."""
-    with _STATE_LOCK:
-        if _ENABLED is not None:
-            return _ENABLED
+    """True when measured runs should be recorded globally.  Lock-free:
+    a single global read (atomic in CPython) — this sits on the dispatch
+    hot path and must cost nanoseconds when recording is off."""
+    e = _ENABLED
+    if e is not None:
+        return e
     return os.environ.get("REPRO_TELEMETRY", "") not in ("", "0", "false")
 
 
@@ -104,14 +111,39 @@ class PhaseTimer:
         self.meta = dict(meta or {})
         self.phases: Dict[str, float] = {}
 
+    #: phase names whose prediction falls back to ``predicted["total"]``
+    #: when no same-named entry exists (mirrors residuals.TOTAL_PHASES).
+    _TOTALISH = ("execute", "total", "step")
+
+    def _predicted_for(self, name: str) -> Optional[float]:
+        p = self.predicted.get(name)
+        if p is None and name in self._TOTALISH:
+            p = self.predicted.get("total")
+        return p
+
     @contextmanager
     def phase(self, name: str):
+        sp = tr = None
+        if obs.enabled():
+            tr = obs.tracer()
+            sp = tr.begin(name, cat=self.kind,
+                          args={"op": self.op, "variant": self.variant,
+                                "n": self.n, "p": self.p})
         t0 = time.perf_counter()
+        err = False
         try:
             yield self
+        except BaseException:
+            err = True
+            raise
         finally:
             dt = time.perf_counter() - t0
             self.phases[name] = self.phases.get(name, 0.0) + dt
+            if sp is not None:
+                # span duration = exactly what the phase accounting saw,
+                # paired with the plan's prediction for the same phase
+                sp.predicted_s = self._predicted_for(name)
+                tr.end(sp, error=err, dur_s=dt)
 
     def wrap(self, name: str):
         def deco(fn):
@@ -145,9 +177,10 @@ class PhaseTimer:
 
 
 def phase_scope(pt: Optional["PhaseTimer"], name: str):
-    """``pt.phase(name)`` when a timer is active, else a no-op context —
-    the guard every instrumented hot path needs, written once."""
-    return pt.phase(name) if pt is not None else nullcontext()
+    """``pt.phase(name)`` when a timer is active, else a shared no-op
+    context — the guard every instrumented hot path needs, written once,
+    allocation-free when recording is off."""
+    return pt.phase(name) if pt is not None else _NULL
 
 
 def timer_for_plan(plan, kind: str = "dispatch",

@@ -47,6 +47,7 @@ from ..linalg.cholesky import make as _make_cholesky
 from ..linalg.grid import distribute, make_grid_mesh
 from ..linalg.summa import make as _make_summa
 from ..linalg.trsm import make as _make_trsm
+from .. import obs
 from .autotune import Tuner, default_tuner
 from .plan import ExecutionPlan
 
@@ -197,45 +198,51 @@ def execute(plan: ExecutionPlan, *operands,
     mesh = _mesh_for(plan.g, plan.c, devs)
     fn = _executor(plan, mesh, devs, interpret)
     pt = None
-    if observe or telemetry.enabled():
+    if observe or telemetry.enabled() or obs.enabled():
         pt = telemetry.timer_for_plan(plan, kind="dispatch")
         if _plan_seconds > 0.0:
             pt.add("plan", _plan_seconds)
     n = plan.n
     g, c = plan.g, plan.c
-    if plan.algo in ("cannon", "summa"):
-        a, b = (jnp.asarray(x) for x in operands)
-        m = _round_up(n, g)
-        with _phase(pt, "distribute"):
-            ad = distribute(_pad_zero(a, m, m), mesh, P("row", "col"))
-            bd = distribute(_pad_zero(b, m, m), mesh, P("row", "col"))
-        with _phase(pt, "execute"):
-            out = fn(ad, bd)[:n, :n]
-            if pt is not None:
-                jax.block_until_ready(out)
-    elif plan.algo == "trsm":
-        u, b = (jnp.asarray(x) for x in operands)
-        m = _round_up(n, g)
-        mb = _round_up(n, c * g)
-        bx_spec = P(("lyr", "row"), "col") if c > 1 else P("row", "col")
-        with _phase(pt, "distribute"):
-            ud = distribute(_pad_eye(u, m), mesh, P("row", "col"))
-            bd = distribute(_pad_zero(b, mb, m), mesh, bx_spec)
-        with _phase(pt, "execute"):
-            out = fn(ud, bd)[:n, :n]
-            if pt is not None:
-                jax.block_until_ready(out)
-    elif plan.algo == "cholesky":
-        (a,) = (jnp.asarray(x) for x in operands)
-        m = _round_up(n, g)
-        with _phase(pt, "distribute"):
-            ad = distribute(_pad_eye(a, m), mesh, P("row", "col"))
-        with _phase(pt, "execute"):
-            out = fn(ad)[:n, :n]
-            if pt is not None:
-                jax.block_until_ready(out)
-    else:
-        raise ValueError(f"unknown algo {plan.algo!r}")
+    # root span for the whole dispatch; the phase() children underneath
+    # (distribute/execute) carry the predicted durations and pair up
+    with obs.maybe_span(f"dispatch:{plan.algo}", cat="dispatch_root",
+                        algo=plan.algo, variant=plan.variant, n=n,
+                        p=plan.p, c=c,
+                        predicted_total_s=plan.predicted.get("total")):
+        if plan.algo in ("cannon", "summa"):
+            a, b = (jnp.asarray(x) for x in operands)
+            m = _round_up(n, g)
+            with _phase(pt, "distribute"):
+                ad = distribute(_pad_zero(a, m, m), mesh, P("row", "col"))
+                bd = distribute(_pad_zero(b, m, m), mesh, P("row", "col"))
+            with _phase(pt, "execute"):
+                out = fn(ad, bd)[:n, :n]
+                if pt is not None:
+                    jax.block_until_ready(out)
+        elif plan.algo == "trsm":
+            u, b = (jnp.asarray(x) for x in operands)
+            m = _round_up(n, g)
+            mb = _round_up(n, c * g)
+            bx_spec = P(("lyr", "row"), "col") if c > 1 else P("row", "col")
+            with _phase(pt, "distribute"):
+                ud = distribute(_pad_eye(u, m), mesh, P("row", "col"))
+                bd = distribute(_pad_zero(b, mb, m), mesh, bx_spec)
+            with _phase(pt, "execute"):
+                out = fn(ud, bd)[:n, :n]
+                if pt is not None:
+                    jax.block_until_ready(out)
+        elif plan.algo == "cholesky":
+            (a,) = (jnp.asarray(x) for x in operands)
+            m = _round_up(n, g)
+            with _phase(pt, "distribute"):
+                ad = distribute(_pad_eye(a, m), mesh, P("row", "col"))
+            with _phase(pt, "execute"):
+                out = fn(ad)[:n, :n]
+                if pt is not None:
+                    jax.block_until_ready(out)
+        else:
+            raise ValueError(f"unknown algo {plan.algo!r}")
     if pt is not None:
         pt.emit(store=store, force=observe)
     return out
@@ -253,8 +260,9 @@ def matmul(A, B, *, devices: Optional[Sequence] = None,
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
     t0 = time.perf_counter()
-    plan = t.plan("matmul", n, devices=devs, dtype=_dtype_key(A),
-                  local_kernel=local_kernel, observe=observe)
+    with obs.maybe_span("plan", cat="dispatch", op="matmul", n=n):
+        plan = t.plan("matmul", n, devices=devs, dtype=_dtype_key(A),
+                      local_kernel=local_kernel, observe=observe)
     return execute(plan, A, B, devices=devs, observe=observe, store=t.store,
                    _plan_seconds=time.perf_counter() - t0)
 
@@ -270,8 +278,9 @@ def trsm(U, B, *, devices: Optional[Sequence] = None,
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
     t0 = time.perf_counter()
-    plan = t.plan("trsm", n, devices=devs, dtype=_dtype_key(U),
-                  local_kernel=local_kernel, observe=observe)
+    with obs.maybe_span("plan", cat="dispatch", op="trsm", n=n):
+        plan = t.plan("trsm", n, devices=devs, dtype=_dtype_key(U),
+                      local_kernel=local_kernel, observe=observe)
     return execute(plan, U, B, devices=devs, observe=observe, store=t.store,
                    _plan_seconds=time.perf_counter() - t0)
 
@@ -285,7 +294,8 @@ def cholesky(A, *, devices: Optional[Sequence] = None,
     t = tuner or default_tuner()
     devs = list(devices) if devices is not None else jax.devices()
     t0 = time.perf_counter()
-    plan = t.plan("cholesky", n, devices=devs, dtype=_dtype_key(A),
-                  local_kernel=local_kernel, observe=observe)
+    with obs.maybe_span("plan", cat="dispatch", op="cholesky", n=n):
+        plan = t.plan("cholesky", n, devices=devs, dtype=_dtype_key(A),
+                      local_kernel=local_kernel, observe=observe)
     return execute(plan, A, devices=devs, observe=observe, store=t.store,
                    _plan_seconds=time.perf_counter() - t0)
