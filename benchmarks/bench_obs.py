@@ -1,7 +1,7 @@
 """Observability-layer overhead and throughput, emitted as
 ``artifacts/bench/BENCH_obs.json``.
 
-Four measurements, all pure CPU:
+Five measurements, all pure CPU:
 
 * **spans/sec** — raw tracer throughput (`span()` open/close into the
   ring buffer);
@@ -13,7 +13,10 @@ Four measurements, all pure CPU:
   paired Chrome/Perfetto JSON (saved under ``artifacts/traces/``);
 * **serving trace** — a cost-model trace replay exported through
   ``obs.serving_trace``; CI checks the paired predicted/measured flow
-  events are present.
+  events are present;
+* **watch** — streaming-detector throughput on the incremental path
+  (CI gates >= 100k obs/s) and observatory-dashboard render time for a
+  10k-span session (CI gates < 1 s).
 """
 
 import json
@@ -132,6 +135,46 @@ def main() -> dict:
     with open(os.path.join("artifacts", "traces",
                            "serving_paired_trace.json"), "w") as f:
         json.dump(doc, f)
+
+    # --- (E) watch: detector throughput + dashboard render ----------------
+    from repro.obs import watch
+
+    watcher = watch.StreamWatcher(emit_alerts=False)
+    rng = np.random.default_rng(7)
+    vals = 0.05 + 0.01 * rng.standard_normal(100_000)
+    sw = watcher.series("rel_err/op/dgemm", tier="op")
+    fires = 0
+    t0 = time.perf_counter()
+    observe = sw.observe
+    for v in vals:
+        fires += len(observe(v))
+    dt = time.perf_counter() - t0
+    out["watch_obs_per_sec"] = len(vals) / dt
+    out["watch_obs_us"] = dt / len(vals) * 1e6
+    out["watch_firings_in_control"] = fires
+    out["watch_outlier_fires"] = len(sw.observe(10.0))
+
+    # dashboard render over the (C) 10k-span session + a synthetic
+    # SLO/history payload — the gate is < 1 s wall
+    slo = watch.SLOWatcher()
+    for i in range(2000):
+        slo.record_outcomes(float(i), ttft=(i % 17 != 0),
+                            tpot=True, goodput=(i % 17 != 0))
+        slo.check(float(i))
+    hist_runs = [watch.BenchRun("BENCH_obs", f"c{i}", "bench", float(i),
+                                {"spans_per_sec": 5e5 * (1 + 0.01 * i)})
+                 for i in range(12)]
+    t0 = time.perf_counter()
+    data = watch.collect_data(
+        summary=obs.summary(spans=spans), accuracy=None,
+        watch=watcher, slo=slo, history=hist_runs)
+    html = watch.render_dashboard(data)
+    out["dashboard_render_s"] = time.perf_counter() - t0
+    out["dashboard_bytes"] = len(html)
+    os.makedirs(os.path.join("artifacts", "obs"), exist_ok=True)
+    with open(os.path.join("artifacts", "obs",
+                           "dashboard_bench.html"), "w") as f:
+        f.write(html)
     return out
 
 

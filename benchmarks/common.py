@@ -1,16 +1,70 @@
-"""Shared benchmark plumbing: CSV emission (name,us_per_call,derived) and
-subprocess running for benches that need multiple host devices."""
+"""Shared benchmark plumbing: CSV emission (name,us_per_call,derived),
+subprocess running for benches that need multiple host devices, and the
+run-metadata stamp every emitted ``BENCH_*.json`` carries (commit SHA,
+timestamp, machine fingerprint, repeat count) so the bench-history
+sentinel can join runs across commits and keep noise bands per-machine."""
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import platform
 import subprocess
 import sys
 import time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ART = os.path.join(REPO, "artifacts")
+
+#: repeat count the emitters report in their stamp (env-overridable so a
+#: CI matrix leg that runs each bench N times can say so).
+DEFAULT_REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "1"))
+
+
+def git_commit() -> str:
+    """Current commit SHA — CI env vars first (works in shallow/exported
+    checkouts), then git, else ""."""
+    for var in ("REPRO_BENCH_COMMIT", "GITHUB_SHA"):
+        sha = os.environ.get(var)
+        if sha:
+            return sha
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return ""
+
+
+def machine_fingerprint() -> str:
+    """Short stable id of the *host* running the benches (distinct from
+    the model's ``Machine.fingerprint()``, which names a calibrated
+    profile).  Same host + toolchain -> same id; history noise bands are
+    only computed within one id.  ``REPRO_BENCH_FINGERPRINT`` overrides
+    (CI sets one per runner class)."""
+    env = os.environ.get("REPRO_BENCH_FINGERPRINT")
+    if env:
+        return env
+    blob = "|".join([
+        platform.machine(), platform.system(), platform.processor(),
+        str(os.cpu_count()), platform.python_version(),
+    ])
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def run_meta(repeats: int = DEFAULT_REPEATS) -> dict:
+    """The ``_meta`` stamp written into every bench JSON."""
+    return {
+        "commit": git_commit(),
+        "timestamp": time.time(),
+        "fingerprint": machine_fingerprint(),
+        "repeats": int(repeats),
+        "python": platform.python_version(),
+        "platform": f"{platform.system()}-{platform.machine()}",
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

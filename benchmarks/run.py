@@ -17,13 +17,18 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from benchmarks.common import ART, emit, run_subprocess_bench  # noqa: E402
+from benchmarks.common import (ART, emit, run_meta,  # noqa: E402
+                               run_subprocess_bench)
 
 OUT = os.path.join(ART, "bench")
 
 
 def _save(name: str, obj: dict):
     os.makedirs(OUT, exist_ok=True)
+    if isinstance(obj, dict):
+        # run-metadata stamp: commit + timestamp + machine fingerprint +
+        # repeat count — what the bench-history sentinel keys runs by
+        obj.setdefault("_meta", run_meta())
     with open(os.path.join(OUT, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1)
 
@@ -198,6 +203,10 @@ def bench_obs():
          f"overhead={res['enabled_overhead_pct']:.2f}% "
          f"export10k={res['export_10k_span_ms']:.0f}ms "
          f"flow_events={res['serving_trace_flow_events']}")
+    emit("obs_watch", 0.0,
+         f"detector_obs={res['watch_obs_per_sec']:.0f}/s "
+         f"dashboard={res['dashboard_render_s'] * 1e3:.0f}ms "
+         f"outlier_fires={res['watch_outlier_fires']}")
 
 
 def bench_serving():
@@ -232,10 +241,47 @@ BENCHES = {
 }
 
 
+def check_regressions() -> int:
+    """Bench-history sentinel: verdict the freshly-written BENCH_*.json
+    files against prior same-machine history, then append them to the
+    history (so the *next* run sees this one).  Exit 1 only on a
+    regression with sufficient history — the first runs that merely
+    build the baseline are warn-only by construction."""
+    from repro.obs.watch import history as hist
+
+    h = hist.BenchHistory()          # REPRO_BENCH_HISTORY_DIR-aware
+    prior = h.load()
+    runs_now = h.ingest_dir(OUT)
+    if not runs_now:
+        print(f"check-regressions: no BENCH_*.json under {OUT} "
+              "(run the benches first)")
+        return 0
+    current = {r.bench: r.metrics for r in runs_now}
+    fp = runs_now[0].fingerprint or None
+    report = hist.check_regressions(current, prior, fingerprint=fp)
+    print(hist.format_report(report))
+    report_path = os.path.join(OUT, "regression_report.json")
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"report: {report_path}  history: {h.path} "
+          f"({len(prior)} prior + {len(runs_now)} new lines)")
+    if not report["sufficient_history"]:
+        print("check-regressions: no metric has enough same-machine "
+              "history yet - warn-only")
+        return 0
+    return 1 if report["counts"]["regression"] else 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None, choices=list(BENCHES))
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="don't run benches; verdict artifacts/bench/"
+                         "BENCH_*.json against the bench history and "
+                         "append this run to it")
     args = ap.parse_args()
+    if args.check_regressions:
+        sys.exit(check_regressions())
     print("name,us_per_call,derived")
     failures = []
     for name, fn in BENCHES.items():

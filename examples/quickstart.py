@@ -9,7 +9,10 @@
 5. close the loop (``repro.telemetry``): record real dispatched matmuls
    on this host, join them against the model's per-phase predictions,
    refit the CPU profile from the residuals, and save the paper-style
-   accuracy report under ``artifacts/telemetry/`` (CI gates on it).
+   accuracy report under ``artifacts/telemetry/`` (CI gates on it),
+6. watch the loop (``repro.obs.watch``): stream the same residuals
+   through the per-tier anomaly detectors and render the self-contained
+   HTML observatory dashboard under ``artifacts/obs/``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -149,6 +152,30 @@ def telemetry_demo():
         print(f"  drift[{st.op}]: rolling mean rel err "
               f"{st.rolling_mean_rel_err:.1%} over last {st.n_rows} runs "
               f"-> {'DRIFTED (profile would be retired)' if st.drifted else 'healthy'}")
+    return rows2, report
+
+
+def observatory_demo(rows, report):
+    """The observatory (repro.obs.watch): stream the demo's residual
+    rows through the per-tier detector banks and render the
+    self-contained HTML dashboard — accuracy table, residual
+    histograms, alert feed — under ``artifacts/obs/``."""
+    from repro import obs
+    from repro.obs import watch
+
+    obs.enable()
+    watcher = watch.StreamWatcher()
+    for row in sorted(rows, key=lambda r: r.timestamp):
+        watcher.observe_residual(row)
+    s = watcher.summary()
+    print(f"  {s['n_obs']} residuals through {s['n_series']} detector "
+          f"bank(s): {s['n_firings']} firing(s)"
+          + (" - the profile would be retired and re-planned"
+             if s["n_firings"] else " (stream in control)"))
+    path = watch.save_dashboard(
+        data=watch.collect_data(accuracy=report, watch=watcher))
+    print(f"  observatory dashboard -> {path} (self-contained HTML; "
+          f"open in any browser)")
 
 
 def main():
@@ -176,7 +203,10 @@ def main():
     simulate_demo(ctx)
 
     print("\n=== Close the loop: measure, refit, report (repro.telemetry) ===")
-    telemetry_demo()
+    rows, report = telemetry_demo()
+
+    print("\n=== Watch the loop: detectors + dashboard (repro.obs.watch) ===")
+    observatory_demo(rows, report)
 
     print("\n=== The same question for an LLM on a TPU pod (beyond-paper) ===")
     from repro.configs import SHAPES, get

@@ -35,7 +35,17 @@ __all__ = [
     "maybe_span", "alert",
     "export_spans", "sim_trace", "serving_trace", "save_trace",
     "summary", "save_summary", "tier_of", "parse_prometheus_text",
+    "watch",
 ]
+
+
+def __getattr__(name):
+    # `watch` is loaded lazily: its modules use ``from .. import alert``,
+    # which needs this module fully initialized first.
+    if name == "watch":
+        import importlib
+        return importlib.import_module(".watch", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _LOCK = threading.Lock()
 _ENABLED: Optional[bool] = None     # None -> consult the environment

@@ -23,6 +23,7 @@ import dataclasses
 import json
 import math
 import os
+import re
 import threading
 import time
 from bisect import bisect_left
@@ -40,10 +41,31 @@ def _labels(labels: Dict[str, object]) -> LabelSet:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(v: str) -> str:
+    # Prometheus text exposition: backslash, double-quote and newline
+    # must be escaped inside label values (in this order — backslash
+    # first, or the other escapes get double-escaped).
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+             .replace("\n", "\\n"))
+
+
+def _unescape_label_value(v: str) -> str:
+    out: List[str] = []
+    it = iter(v)
+    for ch in it:
+        if ch != "\\":
+            out.append(ch)
+            continue
+        nxt = next(it, "")
+        out.append({"n": "\n", '"': '"', "\\": "\\"}.get(nxt, "\\" + nxt))
+    return "".join(out)
+
+
 def _label_str(labels: LabelSet) -> str:
     if not labels:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+    return "{" + ",".join(f'{k}="{_escape_label_value(v)}"'
+                          for k, v in labels) + "}"
 
 
 class Counter:
@@ -140,14 +162,16 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
-    def percentile(self, q: float) -> float:
+    def percentile(self, q: float) -> Optional[float]:
         """Nearest-rank percentile: exact when raw values are kept
         (identical to the serving replay's historical formula), else the
         upper bound of the bucket holding that rank (``max`` for the
-        overflow bucket).  0 for an empty histogram."""
+        overflow bucket).  ``None`` for an empty histogram — a made-up
+        0.0 is indistinguishable from a real zero-latency sample, and
+        callers that want a default can coalesce."""
         with self._lock:
             if self.count == 0:
-                return 0.0
+                return None
             if self._values is not None:
                 s = sorted(self._values)
                 k = min(len(s) - 1,
@@ -271,18 +295,21 @@ def parse_prometheus_text(text: str) -> Dict[str, float]:
         body, _, value = line.rpartition(" ")
         if "{" in body:
             name, _, rest = body.partition("{")
-            labels = rest.rstrip("}")
-            pairs = []
-            for part in labels.split(","):
-                if not part:
-                    continue
-                k, _, v = part.partition("=")
-                pairs.append((k, v.strip('"')))
+            # label values are quoted and may contain escaped quotes,
+            # backslashes, newlines — and literal commas — so a naive
+            # split on "," mangles them; scan quote-aware instead.
+            pairs = [(k, _unescape_label_value(v)) for k, v in
+                     _LABEL_RE.findall(rest.rsplit("}", 1)[0])]
             key = name + _label_str(tuple(sorted(pairs)))
         else:
             key = body
         out[key] = float(value)
     return out
+
+
+#: one ``key="value"`` pair; the value is any run of non-quote,
+#: non-backslash characters or backslash escapes.
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 
 
 @dataclasses.dataclass(frozen=True)

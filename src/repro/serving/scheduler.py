@@ -192,7 +192,8 @@ class Scheduler:
                  policy: Optional[Policy] = None,
                  phase_timer=None, metrics=None,
                  ttft_slo_s: Optional[float] = None,
-                 tpot_slo_s: Optional[float] = None):
+                 tpot_slo_s: Optional[float] = None,
+                 slo_watcher=None):
         self.backend = backend
         self.cost = cost
         self.cfg = (cfg or SchedulerConfig()).resolve()
@@ -211,6 +212,10 @@ class Scheduler:
         self.metrics = metrics
         self.ttft_slo_s = ttft_slo_s
         self.tpot_slo_s = tpot_slo_s
+        # optional obs.watch.SLOWatcher: per-evict good/bad outcomes plus
+        # a burn-rate check per step, on the scheduler's own clock (the
+        # simulated clock under trace replay)
+        self.slo_watcher = slo_watcher
         self._mh: Dict[str, object] = {}  # cached metric handles
 
     # -- submission ---------------------------------------------------------
@@ -320,6 +325,8 @@ class Scheduler:
                 self._evict(rid)
 
             self.steps += 1
+            if self.slo_watcher is not None:
+                self.slo_watcher.check(self.clock)
             self._record(plan, predicted, ex, timed)
             rep = StepReport(
                 self.steps - 1, self.clock, plan, predicted,
@@ -404,9 +411,10 @@ class Scheduler:
         self.backend.release(rid)
         self.finished[rid] = rs
         reg = self._registry()
+        m = rs.metrics() if (reg is not None
+                             or self.slo_watcher is not None) else None
         if reg is not None:
             h = self._ensure_handles(reg)
-            m = rs.metrics()
             h["finished"].inc()
             h["tokens"].inc(m["n_out"])
             h["last_finish"].set(rs.finish_s)
@@ -421,6 +429,15 @@ class Scheduler:
                             or m["tpot_s"] <= self.tpot_slo_s))
                 if met:
                     h["slo_met"].inc()
+        if self.slo_watcher is not None:
+            ttft_ok = (self.ttft_slo_s is None
+                       or (m["ttft_s"] is not None
+                           and m["ttft_s"] <= self.ttft_slo_s))
+            tpot_ok = (self.tpot_slo_s is None or m["n_out"] <= 1
+                       or m["tpot_s"] <= self.tpot_slo_s)
+            self.slo_watcher.record_outcomes(
+                self.clock, ttft=ttft_ok, tpot=tpot_ok,
+                goodput=ttft_ok and tpot_ok)
 
     # -- metrics --------------------------------------------------------------
     def _registry(self):

@@ -109,6 +109,7 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
                   tpot_slo_s: Optional[float] = None,
                   max_steps: Optional[int] = None,
                   metrics: Optional[MetricsRegistry] = None,
+                  slo_watcher=None,
                   ) -> Tuple[ReplayReport, List[StepReport],
                              MetricsRegistry]:
     """:func:`replay`, returning also the per-step reports and the
@@ -132,7 +133,7 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
     sched = Scheduler(SimBackend(), cost,
                       scheduler_cfg or SchedulerConfig(), policy=pol,
                       metrics=reg, ttft_slo_s=ttft_slo_s,
-                      tpot_slo_s=tpot_slo_s)
+                      tpot_slo_s=tpot_slo_s, slo_watcher=slo_watcher)
     for req in trace:
         sched.submit(dataclasses.replace(req))
     reports = sched.run(max_steps=max_steps)
@@ -151,9 +152,13 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
     rep = ReplayReport(
         policy=name, n_requests=len(trace), n_finished=n_finished,
         makespan_s=makespan, steps=len(reports), tokens_out=tokens_out,
-        ttft_p50_s=ttft_h.percentile(50), ttft_p95_s=ttft_h.percentile(95),
-        ttft_p99_s=ttft_h.percentile(99),
-        tpot_p50_s=tpot_h.percentile(50), tpot_p95_s=tpot_h.percentile(95),
+        # empty-histogram percentiles are None (no requests finished);
+        # the report's float fields keep the historical 0.0 convention
+        ttft_p50_s=ttft_h.percentile(50) or 0.0,
+        ttft_p95_s=ttft_h.percentile(95) or 0.0,
+        ttft_p99_s=ttft_h.percentile(99) or 0.0,
+        tpot_p50_s=tpot_h.percentile(50) or 0.0,
+        tpot_p95_s=tpot_h.percentile(95) or 0.0,
         goodput_rps=met / makespan if makespan > 0 else 0.0,
         throughput_tok_s=tokens_out / makespan if makespan > 0 else 0.0,
         slo_met_fraction=met / n_finished if n_finished else 0.0,

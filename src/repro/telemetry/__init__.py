@@ -32,8 +32,9 @@ from .record import (PhaseTimer, default_store, disable, enable, enabled,
 from .residuals import (Residual, TOTAL_PHASES, join, mean_abs_log_ratio,
                         split_comm_comp)
 from .refit import KernelRefitResult, RefitResult, refit, refit_kernels
-from .drift import (DEFAULT_THRESHOLD, DEFAULT_WINDOW, DriftStatus,
-                    bump_revision, check, detect_and_invalidate)
+from .drift import (DEFAULT_THRESHOLD, DEFAULT_WINDOW, DriftLatch,
+                    DriftStatus, bump_revision, check,
+                    detect_and_invalidate, reset_latch)
 from .report import accuracy_report, format_report, save_report
 
 __all__ = [
@@ -43,7 +44,7 @@ __all__ = [
     "Residual", "TOTAL_PHASES", "join", "mean_abs_log_ratio",
     "split_comm_comp",
     "KernelRefitResult", "RefitResult", "refit", "refit_kernels",
-    "DEFAULT_THRESHOLD", "DEFAULT_WINDOW", "DriftStatus", "bump_revision",
-    "check", "detect_and_invalidate",
+    "DEFAULT_THRESHOLD", "DEFAULT_WINDOW", "DriftLatch", "DriftStatus",
+    "bump_revision", "check", "detect_and_invalidate", "reset_latch",
     "accuracy_report", "format_report", "save_report",
 ]

@@ -71,6 +71,8 @@ def reset() -> None:
     with _STATE_LOCK:
         _ENABLED = None
         _STORE = None
+    from .drift import reset_latch
+    reset_latch()
 
 
 def default_store() -> RunStore:

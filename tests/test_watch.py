@@ -1,0 +1,581 @@
+"""repro.obs.watch: streaming detectors (EWMA/CUSUM/rolling-quantile),
+SLO burn-rate alerting, the bench-history regression sentinel, the
+observatory dashboard — and the e2e closed loop: an injected slowdown
+makes CUSUM fire *before* the batch drift window would, the firing
+emits a structured alert, bumps the machine revision, and the tuner
+provably re-plans on the next call."""
+
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro import obs, telemetry
+from repro.obs import watch
+from repro.obs.watch import (BenchHistory, BenchRun, BurnRateRule,
+                             CUSUMDetector, DetectorConfig, EWMADetector,
+                             RollingQuantileDetector, SLOWatcher,
+                             StreamWatcher, RevisionResponder,
+                             check_regressions, flatten_metrics,
+                             metric_direction)
+from repro.telemetry import Residual
+
+
+@pytest.fixture(autouse=True)
+def _isolated_state():
+    obs.reset()
+    telemetry.reset()
+    yield
+    obs.reset()
+    telemetry.reset()
+
+
+def _rows(op, rel_errs, t0=0.0):
+    return [Residual(op=op, variant="2d", n=64, p=1, c=1, phase="execute",
+                     measured=1.0, predicted=1.0 + e, machine="cpu-host",
+                     timestamp=t0 + i)
+            for i, e in enumerate(rel_errs)]
+
+
+# ---------------------------------------------------------------------------
+# Detectors
+# ---------------------------------------------------------------------------
+
+
+class TestDetectors:
+    def test_ewma_warmup_never_fires(self):
+        det = EWMADetector(DetectorConfig(min_obs=8))
+        assert all(det.update(v) is None
+                   for v in [0.0, 100.0, -50.0, 3.0] * 2)
+
+    def test_ewma_fires_on_level_shift(self):
+        det = EWMADetector(DetectorConfig())
+        for i in range(30):
+            assert det.update(0.05 + 0.001 * (i % 3)) is None
+        stat, thr = det.update(1.0)
+        assert stat > thr
+
+    def test_ewma_quiet_in_control(self):
+        det = EWMADetector(DetectorConfig())
+        rng = np.random.default_rng(0)
+        fires = sum(det.update(v) is not None
+                    for v in 0.05 + 0.01 * rng.standard_normal(20_000))
+        assert fires < 20          # < 0.1% false-fire rate
+
+    def test_cusum_small_persistent_shift_fires_fast(self):
+        det = CUSUMDetector(DetectorConfig())
+        rng = np.random.default_rng(1)
+        for v in 0.05 + 0.01 * rng.standard_normal(50):
+            det.update(v)
+        # a 5-sigma persistent shift: h/(delta-k) ~ 5/(5-0.5) -> ~1-2 obs
+        for i in range(5):
+            if det.update(0.10) is not None:
+                break
+        else:
+            pytest.fail("CUSUM never fired on a persistent shift")
+        assert i < 4
+
+    def test_cusum_resets_after_firing(self):
+        det = CUSUMDetector(DetectorConfig())
+        for i in range(20):
+            det.update(0.05 + 0.001 * (i % 3))
+        assert det.update(5.0) is not None
+        assert det.s_pos == 0.0 and det.s_neg == 0.0
+
+    def test_cusum_quiet_in_control(self):
+        det = CUSUMDetector(DetectorConfig())
+        rng = np.random.default_rng(2)
+        fires = sum(det.update(v) is not None
+                    for v in 0.05 + 0.01 * rng.standard_normal(20_000))
+        assert fires < 150         # adaptive baseline keeps ARL high
+
+    def test_quantile_fires_on_spike_only(self):
+        det = RollingQuantileDetector(DetectorConfig())
+        rng = np.random.default_rng(3)
+        for v in 0.05 + 0.01 * rng.standard_normal(200):
+            det.update(v)
+        assert det.update(0.06) is None
+        stat, factor = det.update(5.0)
+        assert stat > factor
+
+    def test_quantile_zero_window_guard(self):
+        det = RollingQuantileDetector(DetectorConfig())
+        for _ in range(50):
+            det.update(0.0)
+        # a window of zeros has no scale; anything > 0 would be
+        # "infinitely" anomalous — must not fire
+        assert det.update(1.0) is None
+
+    def test_quantile_window_is_bounded(self):
+        cfg = DetectorConfig(quantile_window=16)
+        det = RollingQuantileDetector(cfg)
+        for i in range(100):
+            det.update(float(i))
+        assert len(det._sorted) == 16 and len(det._fifo) == 16
+
+    def test_tier_configs_cover_all_tiers(self):
+        assert set(watch.TIER_CONFIGS) == {"kernel", "op", "serve"}
+
+
+# ---------------------------------------------------------------------------
+# StreamWatcher
+# ---------------------------------------------------------------------------
+
+
+class TestStreamWatcher:
+    def test_observe_creates_series_per_key_with_tier_config(self):
+        w = StreamWatcher(emit_alerts=False)
+        w.observe("a", 1.0, tier="kernel")
+        w.observe("b", 1.0, tier="serve")
+        w.observe("b", 2.0, tier="serve")
+        assert w.n_series == 2
+        assert w.series("a").cfg == watch.TIER_CONFIGS["kernel"]
+        assert w.series("b").cfg == watch.TIER_CONFIGS["serve"]
+
+    def test_firing_emits_obs_alert_and_callback(self):
+        obs.enable()
+        seen = []
+        w = StreamWatcher(on_fire=seen.append)
+        for i in range(30):
+            w.observe("s", 0.05 + 0.001 * (i % 3), tier="op")
+        fires = w.observe("s", 5.0, tier="op")
+        assert fires and seen == fires == list(w.firings)
+        c = obs.default_registry().counter("obs_alerts_total", kind="watch")
+        assert c.value == len(fires)
+        assert any(sp.name == "watch" for sp in obs.tracer().spans()
+                   if sp.cat == "alert")
+
+    def test_observe_residual_series_key_and_meta(self):
+        w = StreamWatcher(emit_alerts=False)
+        [row] = _rows("summa", [0.05])
+        w.observe_residual(row)
+        assert "rel_err/op/summa" in w._series
+
+    def test_observe_span_pairs_only(self):
+        w = StreamWatcher(emit_alerts=False)
+        tr = obs.Tracer()
+        tr.complete("matmul", 1e-3, cat="dispatch", predicted_s=1.1e-3,
+                    args={"op": "summa"})
+        tr.complete("unpaired", 1e-3, cat="dispatch")
+        for sp in tr.spans():
+            w.observe_span(sp)
+        assert list(w._series) == ["rel_err/op/summa"]
+
+    def test_poll_gauges_samples_gauges_only(self):
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.gauge("serve_queue_depth", policy="fifo").set(3)
+        reg.counter("steps_total").inc()
+        w = StreamWatcher(emit_alerts=False)
+        w.poll_gauges(reg)
+        [name] = list(w._series)
+        assert name.startswith("gauge/serve_queue_depth")
+        assert w.series(name).tier == "serve"
+
+    def test_firings_ring_is_bounded(self):
+        w = StreamWatcher(emit_alerts=False, max_firings=4)
+        for i in range(30):
+            w.observe("s", 0.05, tier="op")
+        for i in range(20):
+            w.observe("s", 5.0 + i * 5, tier="op")
+        assert len(w.firings) <= 4
+
+    def test_summary_shape(self):
+        w = StreamWatcher(emit_alerts=False)
+        w.observe("s", 1.0, tier="op")
+        s = w.summary()
+        assert s["n_series"] == 1 and s["n_obs"] == 1
+        assert s["n_firings"] == 0 and s["firings"] == []
+
+
+# ---------------------------------------------------------------------------
+# SLO burn rate
+# ---------------------------------------------------------------------------
+
+
+class TestSLO:
+    def test_serving_rules_thresholds_are_reachable(self):
+        for r in watch.SERVING_RULES:
+            # a burn threshold above 1/budget can never fire (bad ratio
+            # is capped at 1); every shipped rule must be reachable
+            assert r.fast_burn * r.budget <= 1.0
+            assert r.slow_burn * r.budget <= 1.0
+
+    def test_burn_rate_math(self):
+        w = SLOWatcher([BurnRateRule("r", objective=0.9, fast_window_s=10,
+                                     slow_window_s=100, min_events=1)])
+        for t in range(10):
+            w.record(float(t), "r", good=(t % 2 == 0))
+        fast, slow, n_fast, n_slow = w.burn_rates(9.0, "r")
+        assert n_slow == 10 and slow == pytest.approx(0.5 / 0.1)
+
+    def test_short_blip_does_not_fire(self):
+        w = SLOWatcher([BurnRateRule("r", objective=0.9, fast_window_s=10,
+                                     slow_window_s=200, fast_burn=5.0,
+                                     slow_burn=3.0, min_events=10)])
+        t = 0.0
+        for i in range(100):
+            t += 1.0
+            w.record(t, "r", good=True)
+        for i in range(3):          # 3 bad events: fast spikes, slow low
+            t += 1.0
+            w.record(t, "r", good=False)
+            w.check(t)
+        assert w.alerts == []
+
+    def test_sustained_burn_fires_once_then_rearms(self):
+        obs.enable()
+        w = SLOWatcher([BurnRateRule("r", objective=0.9, fast_window_s=10,
+                                     slow_window_s=50, fast_burn=5.0,
+                                     slow_burn=3.0, min_events=5)])
+        t = 0.0
+        for i in range(20):
+            t += 1.0
+            w.record(t, "r", good=True)
+            w.check(t)
+        for i in range(40):         # sustained badness
+            t += 1.0
+            w.record(t, "r", good=False)
+            w.check(t)
+        assert len(w.alerts) == 1   # hysteresis: one alert per episode
+        c = obs.default_registry().counter("obs_alerts_total",
+                                           kind="slo_burn")
+        assert c.value == 1
+        for i in range(100):        # recover: windows drain, rule clears
+            t += 1.0
+            w.record(t, "r", good=True)
+            w.check(t)
+        for i in range(40):         # second episode -> second alert
+            t += 1.0
+            w.record(t, "r", good=False)
+            w.check(t)
+        assert len(w.alerts) == 2
+
+    def test_timeline_feeds_dashboard(self):
+        w = SLOWatcher([BurnRateRule("r", objective=0.9, min_events=1)])
+        w.record(1.0, "r", good=False)
+        w.check(1.0)
+        s = w.summary()
+        assert s["timeline"] and s["timeline"][0]["rule"] == "r"
+        assert set(s["rules"]["r"]) >= {"objective", "firing", "n_alerts"}
+
+    def test_unknown_rule_ignored(self):
+        w = SLOWatcher([BurnRateRule("r")])
+        w.record_outcomes(1.0, r=True, other=False)   # no KeyError
+        assert w.burn_rates(1.0, "r")[2] == 1
+
+    def test_watch_replay_post_hoc(self):
+        def req(finish, ttft, tpot, n_out=8):
+            return types.SimpleNamespace(
+                finish_s=finish,
+                metrics=lambda t=ttft, p=tpot, n=n_out: {
+                    "ttft_s": t, "tpot_s": p, "n_out": n})
+        sched = types.SimpleNamespace(
+            ttft_slo_s=1.0, tpot_slo_s=0.1,
+            finished={i: req(float(i), 5.0, 0.5) for i in range(30)})
+        w = watch.watch_replay(None, sched, SLOWatcher(
+            [BurnRateRule("goodput", objective=0.9, fast_window_s=10,
+                          slow_window_s=20, fast_burn=5.0, slow_burn=3.0,
+                          min_events=5)]))
+        assert len(w.alerts) == 1
+
+
+# ---------------------------------------------------------------------------
+# Bench history + regression sentinel
+# ---------------------------------------------------------------------------
+
+
+class TestHistory:
+    def test_append_load_roundtrip(self, tmp_path):
+        h = BenchHistory(str(tmp_path))
+        run = BenchRun("BENCH_x", "abc", "fp", 1.0, {"m": 2.0},
+                       meta={"repeats": 1})
+        h.append(run)
+        assert h.load() == [run]
+        assert h.load(fingerprint="other") == []
+
+    def test_garbage_and_schema_mismatch_skipped(self, tmp_path):
+        h = BenchHistory(str(tmp_path))
+        h.append(BenchRun("BENCH_x", "abc", "fp", 1.0, {"m": 2.0}))
+        with open(h.path, "a") as f:
+            bad = BenchRun("BENCH_y", "d", "fp", 2.0, {}).to_dict()
+            bad["schema"] = 99
+            f.write(json.dumps(bad) + "\n{torn\n")
+        assert len(h.load()) == 1 and h.skipped_lines == 2
+
+    def test_flatten_metrics(self):
+        flat = flatten_metrics({
+            "a": {"b": 2, "ok": True},
+            "_meta": {"commit": "x", "timestamp": 5},
+            "name": "str-skipped", "none": None,
+            "xs": [1.5, 2.5], "rows": [{"v": 1}],
+        })
+        assert flat == {"a.b": 2.0, "a.ok": 1.0, "xs.0": 1.5, "xs.1": 2.5}
+
+    def test_ingest_dir_reads_stamp(self, tmp_path):
+        bench_dir = tmp_path / "bench"
+        bench_dir.mkdir()
+        (bench_dir / "BENCH_x.json").write_text(json.dumps(
+            {"m": 3.0, "_meta": {"commit": "c1", "fingerprint": "fp",
+                                 "timestamp": 7.0}}))
+        (bench_dir / "notabench.json").write_text("{}")
+        h = BenchHistory(str(tmp_path / "hist"))
+        [run] = h.ingest_dir(str(bench_dir))
+        assert (run.bench, run.commit, run.fingerprint) == \
+            ("BENCH_x", "c1", "fp")
+        assert run.metrics == {"m": 3.0}
+        assert h.load() == [run]
+
+    def test_metric_direction_heuristics(self):
+        assert metric_direction("a.events_per_sec") == 1
+        assert metric_direction("a.goodput_ratio") == 1
+        assert metric_direction("a.max_rel_err") == -1
+        assert metric_direction("a.span_us_per_call") == -1  # a latency
+        assert metric_direction("a.dispatch_base_us") == -1
+        assert metric_direction("a.revision") == 0
+
+    def _hist(self, values, metric="x.events_per_sec"):
+        return [BenchRun("B", f"c{i}", "fp", float(i), {metric: v})
+                for i, v in enumerate(values)]
+
+    def test_regression_direction_aware(self):
+        hist = self._hist([100.0, 101.0, 99.0, 100.5])
+        # higher-is-better metric dropping far below band -> regression
+        rep = check_regressions({"B": {"x.events_per_sec": 50.0}}, hist,
+                                fingerprint="fp")
+        assert rep["counts"]["regression"] == 1
+        # rising is an improvement, not a regression
+        rep = check_regressions({"B": {"x.events_per_sec": 200.0}}, hist,
+                                fingerprint="fp")
+        assert rep["counts"]["regression"] == 0
+        assert rep["counts"]["improvement"] == 1
+        # inside the noise band -> ok
+        rep = check_regressions({"B": {"x.events_per_sec": 101.0}}, hist,
+                                fingerprint="fp")
+        assert rep["counts"]["ok"] == 1
+
+    def test_insufficient_history_is_warn_only(self):
+        hist = self._hist([100.0, 101.0])      # < MIN_HISTORY
+        rep = check_regressions({"B": {"x.events_per_sec": 1.0}}, hist,
+                                fingerprint="fp")
+        assert rep["counts"]["no_history"] == 1
+        assert not rep["sufficient_history"]
+
+    def test_other_machine_history_not_joined(self):
+        hist = self._hist([100.0, 101.0, 99.0, 100.5])
+        rep = check_regressions({"B": {"x.events_per_sec": 50.0}}, hist,
+                                fingerprint="another-machine")
+        assert rep["counts"]["no_history"] == 1
+
+    def test_noise_band_scales_with_variance(self):
+        noisy = self._hist([100.0, 140.0, 70.0, 120.0, 85.0])
+        rep = check_regressions({"B": {"x.events_per_sec": 60.0}}, noisy,
+                                fingerprint="fp")
+        # 60 is within the (wide) noise band of this jittery metric
+        assert rep["counts"]["regression"] == 0
+
+    def test_check_regressions_cli(self, tmp_path, monkeypatch):
+        bench_dir = tmp_path / "bench"
+        bench_dir.mkdir()
+        (bench_dir / "BENCH_x.json").write_text(json.dumps(
+            {"events_per_sec": 50.0,
+             "_meta": {"commit": "now", "fingerprint": "fp",
+                       "timestamp": 99.0}}))
+        hist_dir = tmp_path / "history"
+        h = BenchHistory(str(hist_dir))
+        for i, v in enumerate([100.0, 101.0, 99.0]):
+            h.append(BenchRun("BENCH_x", f"c{i}", "fp", float(i),
+                              {"events_per_sec": v}))
+        monkeypatch.setenv("REPRO_BENCH_HISTORY_DIR", str(hist_dir))
+        import benchmarks.run as benchrun
+        monkeypatch.setattr(benchrun, "OUT", str(bench_dir))
+        assert benchrun.check_regressions() == 1      # regression -> fail
+        # the run was appended: next identical check has 4-run history
+        assert len(h.load()) == 4
+
+
+# ---------------------------------------------------------------------------
+# Dashboard
+# ---------------------------------------------------------------------------
+
+
+class TestDashboard:
+    def _data(self):
+        w = StreamWatcher(emit_alerts=False)
+        for i in range(30):
+            w.observe("rel_err/op/summa", 0.05, tier="op")
+        w.observe("rel_err/op/summa", 5.0, tier="op")
+        slo = SLOWatcher()
+        slo.record_outcomes(1.0, ttft=True, tpot=True, goodput=True)
+        slo.check(1.0)
+        hist = [BenchRun("BENCH_x", f"c{i}", "fp", float(i),
+                         {"events_per_sec": 100.0 + i}) for i in range(3)]
+        acc = {"ops": {"summa": {"n_rows": 4, "mean_rel_err": 0.1,
+                                 "max_rel_err": 0.2,
+                                 "mean_abs_log_ratio": 0.09,
+                                 "phases": ["execute"]}},
+               "overall": {"n_rows": 4, "mean_rel_err": 0.1,
+                           "max_rel_err": 0.2, "mean_abs_log_ratio": 0.09}}
+        return watch.collect_data(summary=obs.summary(spans=[]),
+                                  accuracy=acc, watch=w, slo=slo,
+                                  history=hist)
+
+    def test_render_is_self_contained(self):
+        html = watch.render_dashboard(self._data())
+        assert html.startswith("<!doctype html>")
+        assert "window.DATA" in html
+        for token in ("http://", "https://", "src="):
+            assert token not in html     # zero external requests
+        assert "summa" in html
+
+    def test_embedded_json_cannot_break_out_of_script(self):
+        data = self._data()
+        data["title"] = "</script><script>alert(1)</script>"
+        html = watch.render_dashboard(data)
+        assert "</script><script>alert(1)" not in html
+
+    def test_save_dashboard(self, tmp_path):
+        p = watch.save_dashboard(path=str(tmp_path / "dash.html"),
+                                 data=self._data())
+        assert os.path.getsize(p) > 1000
+
+    def test_collect_data_accepts_objects_or_dicts(self):
+        d = self._data()
+        assert d["watch"]["n_firings"] >= 1
+        assert "rules" in d["slo"]
+        assert "BENCH_x" in d["history"]
+        assert d["history"]["BENCH_x"]["metrics"]["events_per_sec"]
+
+    def test_history_series_drops_singletons_and_caps(self):
+        runs = [BenchRun("B", "c0", "fp", 0.0, {"only_once": 1.0})]
+        runs += [BenchRun("B", f"c{i}", "fp", float(i + 1),
+                          {f"m{j:02d}": float(j) for j in range(20)})
+                 for i in range(2)]
+        series = watch.history_series(runs, max_per_bench=5)
+        assert "only_once" not in series["B"]["metrics"]
+        assert len(series["B"]["metrics"]) == 5
+        assert series["B"]["dropped_metrics"] == 15
+
+
+# ---------------------------------------------------------------------------
+# Drift latch regression (the double-fire bug)
+# ---------------------------------------------------------------------------
+
+
+class TestDriftLatch:
+    def test_same_window_alerts_once(self):
+        obs.enable()
+        rows = _rows("summa", [2.0] * 10)
+        for _ in range(5):
+            st = telemetry.check(rows, threshold=0.75, window=10)["summa"]
+            assert st.drifted           # the diagnosis stays truthful
+        c = obs.default_registry().counter("obs_alerts_total", kind="drift")
+        assert c.value == 1             # ...but the alert fires once
+
+    def test_new_evidence_alerts_again(self):
+        obs.enable()
+        rows = _rows("summa", [2.0] * 10)
+        telemetry.check(rows, threshold=0.75, window=10)
+        rows += _rows("summa", [2.0], t0=100.0)
+        telemetry.check(rows, threshold=0.75, window=10)
+        c = obs.default_registry().counter("obs_alerts_total", kind="drift")
+        assert c.value == 2
+
+    def test_detect_and_invalidate_bumps_once_per_episode(self):
+        from repro.tuner import build_default_registry
+        registry = build_default_registry()
+        rows = _rows("summa", [2.0] * 10)
+        m = telemetry.detect_and_invalidate(rows, registry, "cpu-host")
+        assert m is not None and m.revision == 1
+        # same evidence, same revision -> latched, no second bump
+        assert telemetry.detect_and_invalidate(rows, registry,
+                                               "cpu-host") is None
+        assert registry.machine("cpu-host").machine.revision == 1
+        # healthy interlude re-arms; a fresh episode bumps again
+        ok = _rows("summa", [0.01] * 10, t0=50.0)
+        assert telemetry.detect_and_invalidate(ok, registry,
+                                               "cpu-host") is None
+        bad = _rows("summa", [3.0] * 10, t0=100.0)
+        m2 = telemetry.detect_and_invalidate(bad, registry, "cpu-host")
+        assert m2 is not None and m2.revision == 2
+
+    def test_reset_clears_latch(self):
+        obs.enable()
+        rows = _rows("summa", [2.0] * 10)
+        telemetry.check(rows, threshold=0.75, window=10)
+        telemetry.reset()
+        obs.enable()
+        telemetry.check(rows, threshold=0.75, window=10)
+        c = obs.default_registry().counter("obs_alerts_total", kind="drift")
+        assert c.value == 2
+
+
+# ---------------------------------------------------------------------------
+# The e2e closed loop (acceptance): synthetic slowdown -> CUSUM fires
+# before the batch drift window -> alert + revision bump -> cached plan
+# misses on the next Tuner.plan
+# ---------------------------------------------------------------------------
+
+
+class TestClosedLoopWatch:
+    def test_cusum_beats_drift_window_and_replans(self, tmp_path):
+        from repro.tuner import PlanCache, Tuner, build_default_registry
+
+        obs.enable()
+        registry = build_default_registry()
+        tuner = Tuner(registry=registry,
+                      cache=PlanCache(str(tmp_path / "plans")))
+
+        # plan once: cached against the healthy fingerprint
+        fp_before = tuner.plan("matmul", 64, device_count=1,
+                               platform="cpu",
+                               device_kind="watch-e2e").fingerprint
+        tuner.plan("matmul", 64, device_count=1, platform="cpu",
+                   device_kind="watch-e2e")
+        evals_before = tuner.stats["model_evals"]
+
+        responder = RevisionResponder(registry, "cpu-host")
+        watcher = StreamWatcher(on_fire=responder)
+
+        # healthy phase: per-phase rel-err residuals ~5%
+        rows = _rows("summa", [0.05 + 0.002 * (i % 4) for i in range(20)])
+        for r in rows:
+            watcher.observe_residual(r)
+        assert not watcher.firings
+
+        # injected synthetic slowdown: the model now under-predicts by ~2x
+        fired_after = None
+        t = float(len(rows))
+        for i in range(1, 11):
+            [row] = _rows("summa", [1.0], t0=t + i)
+            rows.append(row)
+            if watcher.observe_residual(row):
+                fired_after = i
+                break
+        assert fired_after is not None, "watch never fired on the slowdown"
+
+        # the streaming detector beat the batch drift window: at the
+        # firing point the PR-4 check over the same rows is still silent
+        assert fired_after <= 5
+        st = telemetry.check(rows, threshold=0.75, window=10)["summa"]
+        assert not st.drifted
+
+        # structured alert emitted into the obs stream
+        c = obs.default_registry().counter("obs_alerts_total", kind="watch")
+        assert c.value >= 1
+
+        # the responder bumped the revision exactly once (latched)
+        assert registry.machine("cpu-host").machine.revision == 1
+        for i in range(11, 14):                  # more bad rows, same rev
+            [row] = _rows("summa", [1.0], t0=t + i)
+            watcher.observe_residual(row)
+        assert registry.machine("cpu-host").machine.revision == 1
+        assert len(responder.bumps) == 1
+
+        # the cached plan can no longer be recalled: next plan re-plans
+        replanned = tuner.plan("matmul", 64, device_count=1,
+                               platform="cpu", device_kind="watch-e2e")
+        assert tuner.stats["model_evals"] == evals_before + 1
+        assert replanned.fingerprint != fp_before
