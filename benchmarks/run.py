@@ -223,6 +223,20 @@ def bench_serving():
          f"replayed={rp['n_requests']}")
 
 
+def bench_faults():
+    t0 = time.perf_counter()
+    from benchmarks.bench_faults import main as faults
+    res = faults()
+    _save("BENCH_faults", res)
+    rp, sv = res["replan"], res["serving"]
+    emit("faults_chaos", (time.perf_counter() - t0) * 1e6,
+         f"agree={res['agreement']['max_rel_err_vs_reference']:.1e} "
+         f"localized={rp['localized_correct']} "
+         f"flipped={rp['plan_flipped']} "
+         f"improve={rp['makespan_improvement']:.2f}x "
+         f"shed={sv['n_shed']} deadline={sv['n_deadline_missed']}")
+
+
 BENCHES = {
     "fig1": bench_fig1,
     "fig2": bench_fig2,
@@ -238,6 +252,7 @@ BENCHES = {
     "telemetry": bench_telemetry,
     "serving": bench_serving,
     "obs": bench_obs,
+    "faults": bench_faults,
 }
 
 

@@ -178,6 +178,43 @@ def observatory_demo(rows, report):
           f"open in any browser)")
 
 
+def fault_demo():
+    """Break the machine, find the break, plan around it (repro.sim
+    faults + repro.telemetry.diagnose): inject a degraded torus link,
+    localize it with shift-pattern probes, emit the degraded machine
+    revision, and let the tuner re-plan with the fault injected."""
+    import tempfile
+
+    from repro.sim import DegradedLink, FaultSpec, Network, topology_for, \
+        torus_link
+    from repro.telemetry import emit_degraded_profile, probe_links
+    from repro.tuner import Tuner
+    from repro.tuner.registry import build_default_registry
+
+    reg = build_default_registry()
+    surf = reg.machine("hopper-cray-xe6")
+    topo = topology_for(surf.machine, 64)
+    link = torus_link(topo, 8, 2, +1)          # one dim-2 link, 8x slower
+    measured = Network(topo, surf.machine.latency, surf.machine.inv_bandwidth,
+                       faults=FaultSpec(degraded_links=(
+                           DegradedLink(link, 8.0),)))
+    diag = probe_links(measured)
+    print(f"  injected link {link}; probes localized "
+          f"{diag.component_name} (link {diag.component}) at "
+          f"~{diag.severity:.1f}x")
+    with tempfile.TemporaryDirectory() as td:
+        tuner = Tuner(registry=reg, plan_dir=td)
+        kw = dict(device_count=64, platform="cpu",
+                  machine="hopper-cray-xe6")
+        healthy = tuner.plan("matmul", 8192, refine="sim", **kw)
+        emit_degraded_profile(reg, "hopper-cray-xe6", diag.to_fault_spec(),
+                              diagnosis=diag)
+        degraded = tuner.plan("matmul", 8192, **kw)  # cache-missed, faulted
+        print(f"  healthy plan {healthy.algo}/{healthy.variant} c={healthy.c}"
+              f" -> degraded plan {degraded.algo}/{degraded.variant} "
+              f"c={degraded.c} (routes around the sick link)")
+
+
 def main():
     # The fitted Hopper model (calibration recovered from the paper's
     # published Cannon table; cached in artifacts/)
@@ -207,6 +244,9 @@ def main():
 
     print("\n=== Watch the loop: detectors + dashboard (repro.obs.watch) ===")
     observatory_demo(rows, report)
+
+    print("\n=== Break it: inject a fault, localize, re-plan (repro.sim) ===")
+    fault_demo()
 
     print("\n=== The same question for an LLM on a TPU pod (beyond-paper) ===")
     from repro.configs import SHAPES, get

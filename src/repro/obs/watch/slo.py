@@ -196,6 +196,12 @@ class SLOWatcher:
                               "slow": round(float(slow), 4),
                               "firing": firing})
 
+    def firing(self) -> List[str]:
+        """Rules currently in the firing state (as of the last ``check``).
+        ``check`` only *returns* an alert on the clear->firing edge; a
+        degradation controller needs the level, not the edge."""
+        return [name for name, f in self._firing.items() if f]
+
     # -- output --------------------------------------------------------------
     def summary(self) -> dict:
         """JSON-ready state (dashboard + CI consumption)."""

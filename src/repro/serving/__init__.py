@@ -14,7 +14,8 @@ from .cost import (ServeCostModel, ServeScales, ServeStepCost, cost_model_for,
                    install_scales, predict_serve_step, refit_serving)
 from .engine import Engine, ServeConfig, make_serve_step
 from .kvblocks import BlockCapacityError, BlockManager, blocks_for
-from .policy import FIFOPolicy, ModelGuidedPolicy, Policy, StepPlan, make_policy
+from .policy import (DegradationController, FIFOPolicy, ModelGuidedPolicy,
+                     Policy, StepPlan, make_policy)
 from .scheduler import (ModelBackend, Request, Scheduler, SchedulerConfig,
                         SimBackend, build_scheduler)
 from .trace import (ReplayReport, TraceConfig, compare_policies, replay,

@@ -190,6 +190,66 @@ class ModelGuidedPolicy(Policy):
             base_prefill_s=base, granularity=self._granularity(r))
 
 
+class DegradationController:
+    """Graceful degradation: shrink the prefill step budget under SLO burn.
+
+    Wraps a policy that exposes ``step_budget_s`` (the model-guided
+    policy's predicted-step-time bound).  Each scheduler step hands the
+    controller the current SLO burn-rate alerts
+    (:meth:`repro.obs.slo.SLOWatcher.check`); while any alert fires the
+    budget shrinks multiplicatively (``shrink`` per step, floored at
+    ``floor_frac`` of the configured budget), trading prefill throughput
+    for decode latency exactly where the burn is.  When the alerts clear
+    the budget recovers geometrically (``recover`` per step) back to the
+    base — no oscillating bang-bang, no permanent penalty.
+
+    For policies without a step budget (e.g. FIFO) the controller is a
+    recording no-op: ``update`` returns None and changes nothing.
+    """
+
+    def __init__(self, policy: Policy, *, floor_frac: float = 0.25,
+                 shrink: float = 0.5, recover: float = 1.2):
+        if not 0.0 < floor_frac <= 1.0:
+            raise ValueError("floor_frac must be in (0, 1]")
+        if not 0.0 < shrink < 1.0:
+            raise ValueError("shrink must be in (0, 1)")
+        if recover <= 1.0:
+            raise ValueError("recover must be > 1")
+        self.policy = policy
+        self.floor_frac = float(floor_frac)
+        self.shrink = float(shrink)
+        self.recover = float(recover)
+        self.base_budget_s: Optional[float] = None
+        budget = getattr(policy, "step_budget_s", None)
+        if budget is not None:
+            self.base_budget_s = float(budget)
+        self.events: List[dict] = []
+
+    @property
+    def degraded(self) -> bool:
+        cur = getattr(self.policy, "step_budget_s", None)
+        return (self.base_budget_s is not None and cur is not None
+                and cur < self.base_budget_s)
+
+    def update(self, alerts) -> Optional[float]:
+        """Apply one step of shrink/recover; returns the current budget
+        (None when the policy has no step budget to govern)."""
+        if self.base_budget_s is None:
+            return None
+        cur = float(self.policy.step_budget_s)
+        if alerts:
+            new = max(cur * self.shrink, self.base_budget_s * self.floor_frac)
+        else:
+            new = min(cur * self.recover, self.base_budget_s)
+        if new != cur:
+            self.events.append({
+                "action": "shrink" if new < cur else "recover",
+                "budget_s": new,
+                "alerts": [getattr(a, "rule", str(a)) for a in alerts or ()]})
+            self.policy.step_budget_s = new
+        return new
+
+
 def make_policy(name: str, *, step_budget_s: Optional[float] = None,
                 tuner=None) -> Policy:
     """Factory: ``"fifo"`` or ``"model"``."""

@@ -69,6 +69,8 @@ class Request:
     temperature: float = 0.0
     seed: int = 0
     output_len: Optional[int] = None       # sim: tokens until synthetic EOS
+    deadline_s: Optional[float] = None     # seconds after arrival; expired
+    #                                        requests are evicted, not served
 
     def __post_init__(self):
         if self.prompt is not None and not self.prompt_len:
@@ -100,6 +102,13 @@ class RequestState:
     @property
     def prompt_len(self) -> int:
         return self.req.prompt_len
+
+    @property
+    def deadline_at(self) -> Optional[float]:
+        """Absolute clock time this request expires (None = no deadline)."""
+        if self.req.deadline_s is None:
+            return None
+        return self.arrival_s + self.req.deadline_s
 
     # -- progress ----------------------------------------------------------
     @property
@@ -175,6 +184,8 @@ class SchedulerConfig:
     num_blocks: Optional[int] = None  # pool size; default fits max_active rings
     max_batch: int = 16              # decode batch cap
     max_active: Optional[int] = None  # admission cap; default max_batch
+    max_queue: Optional[int] = None  # waiting-queue bound; overflow is shed
+    #                                  by predicted cost (None = unbounded)
 
     def resolve(self) -> "SchedulerConfig":
         out = dataclasses.replace(self)
@@ -193,7 +204,7 @@ class Scheduler:
                  phase_timer=None, metrics=None,
                  ttft_slo_s: Optional[float] = None,
                  tpot_slo_s: Optional[float] = None,
-                 slo_watcher=None):
+                 slo_watcher=None, degradation=None):
         self.backend = backend
         self.cost = cost
         self.cfg = (cfg or SchedulerConfig()).resolve()
@@ -216,6 +227,9 @@ class Scheduler:
         # a burn-rate check per step, on the scheduler's own clock (the
         # simulated clock under trace replay)
         self.slo_watcher = slo_watcher
+        # optional policy.DegradationController: burn-rate alerts shrink
+        # the policy's prefill step budget, healthy checks recover it
+        self.degradation = degradation
         self._mh: Dict[str, object] = {}  # cached metric handles
 
     # -- submission ---------------------------------------------------------
@@ -252,6 +266,8 @@ class Scheduler:
 
     def _step_impl(self, tr) -> Optional[StepReport]:
         self._drain_arrivals()
+        self._enforce_deadlines()
+        self._shed_overflow()
         # one logical step = one root span (the fast-forward recursion
         # below closes its own zero-duration marker first)
         sp = None
@@ -327,6 +343,14 @@ class Scheduler:
             self.steps += 1
             if self.slo_watcher is not None:
                 self.slo_watcher.check(self.clock)
+                if self.degradation is not None:
+                    # feed the firing *level*, not check()'s edge-triggered
+                    # alerts: the budget stays shrunk while the burn lasts
+                    budget = self.degradation.update(
+                        self.slo_watcher.firing())
+                    reg = self._registry()
+                    if reg is not None and budget is not None:
+                        self._ensure_handles(reg)["budget"].set(budget)
             self._record(plan, predicted, ex, timed)
             rep = StepReport(
                 self.steps - 1, self.clock, plan, predicted,
@@ -377,6 +401,60 @@ class Scheduler:
 
     def request_metrics(self) -> List[Dict[str, float]]:
         return [rs.metrics() for rs in self.finished.values()]
+
+    # -- robustness -----------------------------------------------------------
+    def _drop_waiting(self, rs: RequestState, reason: str) -> None:
+        """Retire a never-admitted request: it was not served, so it is a
+        bad SLO outcome and does NOT count in ``serve_finished_total``
+        (which tracks requests the scheduler actually ran)."""
+        rs.finish(self.clock, reason)
+        self.finished[rs.rid] = rs
+        if self.slo_watcher is not None:
+            self.slo_watcher.record_outcomes(self.clock, ttft=False,
+                                             goodput=False)
+
+    def _enforce_deadlines(self) -> None:
+        """Evict every request whose absolute deadline has passed —
+        waiting requests are dropped unserved, active ones are evicted
+        mid-stream (their blocks freed for live work)."""
+        expired = [rs for rs in self.waiting
+                   if rs.deadline_at is not None
+                   and self.clock > rs.deadline_at]
+        reg = self._registry()
+        for rs in expired:
+            self.waiting.remove(rs)
+            self._drop_waiting(rs, "deadline")
+        n = len(expired)
+        for rid in [rid for rid, rs in self.active.items()
+                    if rs.deadline_at is not None
+                    and self.clock > rs.deadline_at]:
+            self.active[rid].finish(self.clock, "deadline")
+            self._evict(rid)
+            n += 1
+        if n and reg is not None:
+            self._ensure_handles(reg)["deadline"].inc(n)
+
+    def _shed_overflow(self) -> None:
+        """Predicted-cost-aware load shedding: when the admission queue
+        overflows ``cfg.max_queue``, keep the cheapest requests (by the
+        cost model's predicted prefill time, FIFO-tie-broken) and shed
+        the expensive tail — bounding queue growth under overload at the
+        smallest loss of predicted goodput."""
+        mq = self.cfg.max_queue
+        if mq is None or len(self.waiting) <= mq:
+            return
+        ranked = sorted(
+            self.waiting,
+            key=lambda rs: (self.cost.request_prefill_cost(rs.prompt_len),
+                            rs.arrival_s, rs.rid))
+        shed = ranked[mq:]
+        keep = set(id(rs) for rs in ranked[:mq])
+        self.waiting = [rs for rs in self.waiting if id(rs) in keep]
+        for rs in shed:
+            self._drop_waiting(rs, "shed")
+        reg = self._registry()
+        if reg is not None:
+            self._ensure_handles(reg)["shed"].inc(len(shed))
 
     # -- internals ------------------------------------------------------------
     def _admit(self) -> List[RequestState]:
@@ -457,6 +535,10 @@ class Scheduler:
             h["finished"] = reg.counter("serve_finished_total", policy=pol)
             h["tokens"] = reg.counter("serve_tokens_out_total", policy=pol)
             h["slo_met"] = reg.counter("serve_slo_met_total", policy=pol)
+            h["deadline"] = reg.counter("serve_deadline_missed_total",
+                                        policy=pol)
+            h["shed"] = reg.counter("serve_shed_total", policy=pol)
+            h["budget"] = reg.gauge("serve_step_budget_s", policy=pol)
             h["queue"] = reg.gauge("serve_queue_depth", policy=pol)
             h["active"] = reg.gauge("serve_active_requests", policy=pol)
             h["kv_used"] = reg.gauge("serve_kv_blocks_used", policy=pol)
@@ -752,7 +834,8 @@ def build_scheduler(model=None, params=None, *, cfg_model=None,
                     backend: Optional[Any] = None, tuner=None,
                     phase_timer=None, metrics=None,
                     ttft_slo_s: Optional[float] = None,
-                    tpot_slo_s: Optional[float] = None) -> Scheduler:
+                    tpot_slo_s: Optional[float] = None,
+                    slo_watcher=None, degradation=None) -> Scheduler:
     """Convenience constructor.  With ``model``/``params``: real execution
     (:class:`ModelBackend`); without: cost-model simulation
     (:class:`SimBackend`).  ``cfg_model`` is the ModelConfig the cost
@@ -772,6 +855,10 @@ def build_scheduler(model=None, params=None, *, cfg_model=None,
         else:
             backend = SimBackend()
     pol = make_policy(policy, step_budget_s=step_budget_s, tuner=tuner)
+    if degradation is True:
+        from .policy import DegradationController
+        degradation = DegradationController(pol)
     return Scheduler(backend, cost, scfg, policy=pol,
                      phase_timer=phase_timer, metrics=metrics,
-                     ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+                     ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s,
+                     slo_watcher=slo_watcher, degradation=degradation)

@@ -96,6 +96,8 @@ class ReplayReport:
     slo_met_fraction: float
     ttft_slo_s: float
     tpot_slo_s: float
+    n_shed: int = 0                    # load-shed before ever running
+    n_deadline_missed: int = 0         # dropped/evicted past deadline
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -109,7 +111,7 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
                   tpot_slo_s: Optional[float] = None,
                   max_steps: Optional[int] = None,
                   metrics: Optional[MetricsRegistry] = None,
-                  slo_watcher=None,
+                  slo_watcher=None, degrade: bool = False,
                   ) -> Tuple[ReplayReport, List[StepReport],
                              MetricsRegistry]:
     """:func:`replay`, returning also the per-step reports and the
@@ -130,10 +132,20 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
         tpot_slo_s = 6.0 * cost.decode_step([256] * 8).decode_s
     reg = metrics if metrics is not None else MetricsRegistry()
     pol = make_policy(policy, step_budget_s=step_budget_s)
+    degradation = None
+    if degrade:
+        # graceful degradation needs a burn-rate signal; build a watcher
+        # when the caller did not bring one
+        if slo_watcher is None:
+            from ..obs.watch.slo import SLOWatcher
+            slo_watcher = SLOWatcher()
+        from .policy import DegradationController
+        degradation = DegradationController(pol)
     sched = Scheduler(SimBackend(), cost,
                       scheduler_cfg or SchedulerConfig(), policy=pol,
                       metrics=reg, ttft_slo_s=ttft_slo_s,
-                      tpot_slo_s=tpot_slo_s, slo_watcher=slo_watcher)
+                      tpot_slo_s=tpot_slo_s, slo_watcher=slo_watcher,
+                      degradation=degradation)
     for req in trace:
         sched.submit(dataclasses.replace(req))
     reports = sched.run(max_steps=max_steps)
@@ -162,7 +174,10 @@ def replay_traced(trace: Sequence[Request], cost: ServeCostModel, *,
         goodput_rps=met / makespan if makespan > 0 else 0.0,
         throughput_tok_s=tokens_out / makespan if makespan > 0 else 0.0,
         slo_met_fraction=met / n_finished if n_finished else 0.0,
-        ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+        ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s,
+        n_shed=int(reg.counter("serve_shed_total", policy=name).value),
+        n_deadline_missed=int(
+            reg.counter("serve_deadline_missed_total", policy=name).value))
     return rep, reports, reg
 
 

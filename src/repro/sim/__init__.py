@@ -27,6 +27,11 @@ contention emerges from where traffic actually collides:
                 under ``artifacts/traces/``
   calibrate.py  ``derive_calibration``: C_avg / C_max tables from
                 simulated link loads
+  faults.py     declarative fault injection: ``FaultSpec`` bundles slow
+                ranks (compute multipliers), degraded links (per-link
+                beta multipliers) and dead links (reroute-or-
+                unreachable), with optional onsets; applied inside
+                ``Network``/``ProgramSimulator`` via ``faults=``
 
 On a contention-free topology the simulated makespan equals the
 closed-form ``est_NoCal`` estimate to float round-off (gated in CI); on a
@@ -38,6 +43,8 @@ refine="sim")`` re-ranks the closed-form shortlist by simulated time.
 
 from .topology import Crossbar, ShiftPlan, Topology, Torus, topology_for
 from .fold import Fold, build_fold, refine_partition, trivial_fold
+from .faults import (DeadLink, DegradedLink, FaultSpec, FaultyTopology,
+                     SlowRank, UnreachableError, torus_link)
 from .network import LinkStats, Network, Transfer
 from .executor import (MAX_UNROLL, ProgramSimulator, simulate_program,
                        simulate_programs)
@@ -48,6 +55,8 @@ from .calibrate import (derive_calibration, hopper_like_topology,
 __all__ = [
     "Crossbar", "ShiftPlan", "Topology", "Torus", "topology_for",
     "Fold", "build_fold", "refine_partition", "trivial_fold",
+    "DeadLink", "DegradedLink", "FaultSpec", "FaultyTopology",
+    "SlowRank", "UnreachableError", "torus_link",
     "LinkStats", "Network", "Transfer",
     "MAX_UNROLL", "ProgramSimulator", "simulate_program",
     "simulate_programs",

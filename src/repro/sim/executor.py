@@ -47,6 +47,7 @@ from ..core.perfmodel import ROUTINE_FLOPS
 from ..perf import collective_schedule
 from ..perf.ir import (Collective, Compute, Loop, Node, Overlap, P2P, Program,
                        Seq, SyncP2P)
+from .faults import FaultSpec
 from .network import Network
 from .result import RankPhase, SimResult
 from .topology import Topology, topology_for
@@ -62,7 +63,8 @@ class ProgramSimulator:
 
     def __init__(self, program: Program, ctx, topology: Topology,
                  n: float, p: int, c: float = 1, r: float = 1,
-                 *, fold: bool = True, engine: str = "vector"):
+                 *, fold: bool = True, engine: str = "vector",
+                 faults: Optional[FaultSpec] = None):
         p = int(p)
         if p < 1:
             raise ValueError(f"need p >= 1, got {p}")
@@ -79,8 +81,11 @@ class ProgramSimulator:
         self.efficiency = ctx.comp.efficiency
         self.latency = ctx.comm.machine.latency
         self.beta = ctx.comm.machine.inv_bandwidth
+        self.faults = faults if faults is not None and not faults.empty \
+            else None
+        self._max_onset = self.faults.max_onset_s if self.faults else 0.0
         self.net = Network(topology, self.latency, self.beta,
-                           fold=fold, engine=engine)
+                           fold=fold, engine=engine, faults=self.faults)
         self.compute_events = 0
         self.phases: Dict[str, RankPhase] = {}
 
@@ -151,6 +156,11 @@ class ProgramSimulator:
         if isinstance(node, Compute):
             dur = self._t_rout(node) * scale
             self.compute_events += self.p
+            if self.faults is not None:
+                rs = self.faults.compute_scales(clocks)
+                if rs is not None:
+                    dvec = dur * rs
+                    return clocks + dvec, self._zeros(), dvec
             return clocks + dur, self._zeros(), np.full(self.p, dur)
         if isinstance(node, (P2P, SyncP2P)):
             new, exposed = self._shift(clocks, node.words.ev(self.env),
@@ -222,7 +232,12 @@ class ProgramSimulator:
             cm, cp = cm + a, cp + b
             i += 1
             delta = clocks - before
-            if prev_delta is not None and i < whole and np.allclose(
+            # fast-forwarding is unsafe while a fault onset is still ahead
+            # of any rank: the iteration just simulated is not yet the
+            # steady state the extrapolation would repeat
+            ff_ok = self.faults is None \
+                or float(before.min()) >= self._max_onset
+            if ff_ok and prev_delta is not None and i < whole and np.allclose(
                     delta, prev_delta, rtol=1e-9,
                     atol=1e-12 * (float(np.abs(delta).max()) + 1e-300)):
                 k = whole - i
@@ -241,6 +256,9 @@ class ProgramSimulator:
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         count = max(float(node.count.ev(self.env)), 0.0)
         pure = self._compute_only_seconds(node.body)
+        if pure is not None and self.faults is not None \
+                and self.faults.slow_ranks:
+            pure = None  # slow ranks break the all-ranks-identical collapse
         if pure is not None:
             dur = pure * scale * count
             self.compute_events += self.p
@@ -322,8 +340,8 @@ class ProgramSimulator:
 
 def simulate_program(program: Program, ctx, topology: Topology,
                      n: float, p: int, c: float = 1, r: float = 1,
-                     *, fold: bool = True, engine: str = "vector"
-                     ) -> SimResult:
+                     *, fold: bool = True, engine: str = "vector",
+                     faults: Optional[FaultSpec] = None) -> SimResult:
     """Simulate one scalar scenario of ``program`` on ``topology`` using
     the machine surfaces of ``ctx`` (the same ``AlgoContext`` the
     closed-form evaluator takes).  Ranks 0..p-1 map to topology nodes
@@ -332,14 +350,17 @@ def simulate_program(program: Program, ctx, topology: Topology,
     ``fold=False`` opts out of rank-symmetry folding (still the
     vectorized sparse engine) for traffic the class detector cannot lump;
     ``engine="reference"`` replays through the PR-3 per-transfer event
-    loop — the agreement oracle the CI gate compares against."""
+    loop — the agreement oracle the CI gate compares against;
+    ``faults`` injects per-component degradation
+    (:class:`~repro.sim.faults.FaultSpec`)."""
     return ProgramSimulator(program, ctx, topology, n, p, c, r,
-                            fold=fold, engine=engine).run()
+                            fold=fold, engine=engine, faults=faults).run()
 
 
 def simulate_programs(programs, ctx, scenarios, *, topology=None,
                       machine=None, fold: bool = True,
-                      engine: str = "vector", strict: bool = True):
+                      engine: str = "vector", strict: bool = True,
+                      faults: Optional[FaultSpec] = None):
     """Batch simulation: replay ``programs`` over ``scenarios`` in one
     call, sharing every route/fold cache across runs.
 
@@ -379,7 +400,7 @@ def simulate_programs(programs, ctx, scenarios, *, topology=None,
             results.append(ProgramSimulator(
                 prog, ctx, topo, float(scen["n"]), p,
                 float(scen.get("c", 1)), float(scen.get("r", 1)),
-                fold=fold, engine=engine).run())
+                fold=fold, engine=engine, faults=faults).run())
         except Exception:
             if strict:
                 raise

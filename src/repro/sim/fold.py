@@ -117,7 +117,8 @@ def _canon(parts) -> Tuple[np.ndarray, int]:
 def refine_partition(owner: np.ndarray, lid: np.ndarray, T: int, L: int,
                      init_labels: np.ndarray,
                      indptr: Optional[np.ndarray] = None,
-                     static_load: Optional[np.ndarray] = None
+                     static_load: Optional[np.ndarray] = None,
+                     link_seed: Optional[np.ndarray] = None
                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
     """Color-refine the transfer/link incidence to its coarsest equitable
     partition.  Returns ``(t_class, l_class)`` or None when the round cap
@@ -127,9 +128,16 @@ def refine_partition(owner: np.ndarray, lid: np.ndarray, T: int, L: int,
     first rounds would otherwise spend bincounts discovering: links start
     split by static load, transfers by (seed, hop count, static
     bottleneck) — refinement only ever *splits*, so a finer valid seed
-    changes nothing but the round count."""
+    changes nothing but the round count.
+
+    ``link_seed`` is an optional per-unique-link integer label folded into
+    the initial link partition — fault injection seeds degraded links into
+    their own classes here, so the equitability the fluid engine relies on
+    also covers the per-link beta scales (a class never mixes scales)."""
     if indptr is not None and static_load is not None:
-        l_lab, M = _canon([static_load])
+        l_parts = [static_load] if link_seed is None \
+            else [static_load, link_seed]
+        l_lab, M = _canon(l_parts)
         hops = np.diff(indptr)
         bneck = np.zeros(T, dtype=np.int64)
         routed = hops > 0
@@ -139,8 +147,11 @@ def refine_partition(owner: np.ndarray, lid: np.ndarray, T: int, L: int,
         t_lab, K = _canon([init_labels, hops, bneck])
     else:
         t_lab, K = _canon([init_labels])
-        l_lab = np.zeros(L, dtype=np.int64)
-        M = 1 if L else 0
+        if link_seed is not None and L:
+            l_lab, M = _canon([link_seed])
+        else:
+            l_lab = np.zeros(L, dtype=np.int64)
+            M = 1 if L else 0
     sums = np.empty((L, _FINGERPRINT_WORDS))
     tsum = np.empty((T, _FINGERPRINT_WORDS))
     for rnd in range(MAX_REFINE_ROUNDS):
@@ -178,15 +189,20 @@ def trivial_fold(plan_T: int, indptr: np.ndarray, link_idx: np.ndarray,
         nonempty=np.diff(indptr) > 0)
 
 
-def build_fold(plan: ShiftPlan, init_labels: np.ndarray) -> Fold:
+def build_fold(plan: ShiftPlan, init_labels: np.ndarray,
+               link_seed: Optional[np.ndarray] = None) -> Fold:
     """Fold a shift pattern given per-transfer seed labels (clock classes;
-    callers must also fold message size into the seed when it varies)."""
+    callers must also fold message size into the seed when it varies).
+    ``link_seed`` pre-splits the link partition (per-unique-link labels,
+    e.g. fault-injection beta-scale classes); see
+    :func:`refine_partition`."""
     T, L = plan.p, plan.uniq_links.size
     owner, lid = plan.owner, plan.link_idx
     fallback = lambda: trivial_fold(T, plan.indptr, lid, owner, L)  # noqa: E731
     refined = refine_partition(owner, lid, T, L, init_labels,
                                indptr=plan.indptr,
-                               static_load=plan.static_load)
+                               static_load=plan.static_load,
+                               link_seed=link_seed)
     if refined is None:
         return fallback()
     t_lab, l_lab = refined

@@ -33,11 +33,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .fold import Fold, build_fold, trivial_fold
+from .faults import FaultSpec, FaultyTopology
 from .topology import ShiftPlan, Topology
 
 
@@ -138,10 +139,20 @@ class Network:
     asymmetric traffic where class detection cannot pay off.  ``events``
     counts logical transfer endpoints (one start + one completion per
     message, including messages simulated by a folded representative).
+
+    ``faults`` injects per-component degradation (:mod:`repro.sim.faults`):
+    degraded links multiply the effective load the bottleneck max sees on
+    that link, dead links reroute the pattern through a private
+    :class:`~repro.sim.faults.FaultyTopology` view (own plan/fold caches —
+    the shared memoized topology is never poisoned), and fault onsets are
+    evaluated per pattern (active iff the pattern's earliest start has
+    reached the onset).  Both engines apply the same math, so the 1e-6
+    agreement gate carries over to faulted runs.
     """
 
     def __init__(self, topology: Topology, latency: float, beta: float,
-                 *, fold: bool = True, engine: str = "vector"):
+                 *, fold: bool = True, engine: str = "vector",
+                 faults: Optional[FaultSpec] = None):
         if engine not in ("vector", "reference"):
             raise ValueError(f"engine must be 'vector' or 'reference', "
                              f"got {engine!r}")
@@ -150,8 +161,47 @@ class Network:
         self.beta = float(beta)
         self.fold = bool(fold)
         self.engine = engine
+        self.faults = faults if faults is not None and not faults.empty \
+            else None
         self.stats = LinkStats()
         self.events = 0
+        # one FaultyTopology per active dead-link set ("epoch"): route/plan/
+        # fold caches are per-epoch, keyed by which links are gone
+        self._fault_topos: Dict[frozenset, FaultyTopology] = {}
+
+    # -- fault plumbing ------------------------------------------------------
+    def _topology_at(self, t: float) -> Topology:
+        """The routing view active at pattern time ``t`` (the base topology
+        until a dead-link onset passes)."""
+        if self.faults is None or not self.faults.dead_links:
+            return self.topology
+        dead = self.faults.active_dead(t)
+        if not dead:
+            return self.topology
+        topo = self._fault_topos.get(dead)
+        if topo is None:
+            topo = FaultyTopology(self.topology, dead)
+            self._fault_topos[dead] = topo
+        return topo
+
+    def _link_scales(self, links: np.ndarray, t: float
+                     ) -> Optional[np.ndarray]:
+        if self.faults is None:
+            return None
+        return self.faults.link_scales(links, t)
+
+    @staticmethod
+    def _route_bneck(indptr: np.ndarray, link_idx: np.ndarray,
+                     scales: np.ndarray, T: int) -> np.ndarray:
+        """Per-transfer max link scale over its route (>= 1) — the ideal
+        alpha-beta slowdown of a collision-free pattern under degraded
+        links."""
+        b = np.ones(T)
+        routed = np.diff(indptr) > 0
+        if routed.any():
+            b[routed] = np.maximum.reduceat(scales[link_idx],
+                                            indptr[:-1][routed])
+        return np.maximum(b, 1.0)
 
     # -- the executor's fast path: one whole shift pattern -------------------
     def deliver_shift(self, starts: np.ndarray, words: float, d: int,
@@ -161,7 +211,10 @@ class Network:
         p = starts.size
         self.events += 2 * p
         w = max(float(words), 0.0)
-        plan = self.topology.shift_plan(p, d)
+        t0 = float(starts.min()) if p else 0.0
+        topo = self._topology_at(t0)
+        plan = topo.shift_plan(p, d)
+        scales = self._link_scales(plan.uniq_links, t0)
         if w <= 0.0:
             if plan.max_static_load <= 1:
                 self.stats.add(plan.uniq_links, 0.0, 0.0, 1)
@@ -169,21 +222,46 @@ class Network:
         if self.engine == "reference":
             self.events -= 2 * p  # the reference engine counts its own
             return self._reference_from_plan(
-                starts, np.full(p, w), np.full(p, latency), plan)
+                starts, np.full(p, w), np.full(p, latency), plan, scales)
         if plan.max_static_load <= 1:
-            # collision-free for any start times: ideal alpha-beta
-            self.stats.add(plan.uniq_links, w, self.beta * w, 1)
-            return starts + (latency + self.beta * w)
-        fold = self._shift_fold(plan, starts)
+            # collision-free for any start times: ideal alpha-beta, times
+            # the worst degraded-link scale on each route (if any)
+            if scales is None:
+                self.stats.add(plan.uniq_links, w, self.beta * w, 1)
+                return starts + (latency + self.beta * w)
+            bneck = self._route_bneck(plan.indptr, plan.link_idx, scales, p)
+            self.stats.add(plan.uniq_links, w, self.beta * w * scales, 1)
+            return starts + (latency + self.beta * w * bneck)
+        fold = self._shift_fold(plan, starts, topo=topo, scales=scales)
+        scale_m = self._fold_scales(fold, scales)
         done_k = self._solve(starts[fold.rep], np.full(fold.K, w), fold,
-                             plan.uniq_links)
+                             plan.uniq_links, scale_m)
         return done_k[fold.t_class] + latency
 
-    def _shift_fold(self, plan: ShiftPlan, starts: np.ndarray) -> Fold:
+    @staticmethod
+    def _fold_scales(fold: Fold, scales: Optional[np.ndarray]
+                     ) -> Optional[np.ndarray]:
+        """Per-link-class scale vector.  Valid because the fold was seeded
+        by the scale classes (or is trivial), so a class never mixes
+        scales — the scatter below assigns each class one value."""
+        if scales is None:
+            return None
+        scale_m = np.ones(fold.M)
+        scale_m[fold.l_class] = scales
+        return scale_m
+
+    def _shift_fold(self, plan: ShiftPlan, starts: np.ndarray,
+                    topo: Optional[Topology] = None,
+                    scales: Optional[np.ndarray] = None) -> Fold:
         """The cached symmetry fold of a shift pattern, seeded by the
         per-rank clock classes (equal-clock ranks may share a class;
         folding is keyed on the class *structure*, not the clock values,
-        so a steady-state loop reuses one fold across iterations)."""
+        so a steady-state loop reuses one fold across iterations).  Link
+        beta scales join both the seed and the cache key: the same
+        (p, d, clocks) pattern folds differently before and after a fault
+        onset."""
+        if topo is None:
+            topo = self.topology
         if starts.size and starts[0] == starts[-1] \
                 and float(starts.min()) == float(starts.max()):
             labels = np.zeros(starts.size, dtype=np.int64)  # lockstep
@@ -193,12 +271,19 @@ class Network:
         if not self.fold:
             return trivial_fold(plan.p, plan.indptr, plan.link_idx,
                                 plan.owner, plan.uniq_links.size)
+        link_seed = None
+        sig = b""
+        if scales is not None:
+            link_seed = np.unique(scales, return_inverse=True)[1]
+            link_seed = link_seed.astype(np.int64).ravel()
+            sig = hashlib.blake2b(scales.tobytes(), digest_size=16).digest()
         key = (plan.p, plan.d,
-               hashlib.blake2b(labels.tobytes(), digest_size=16).digest())
-        fold = self.topology.fold_get(key)
+               hashlib.blake2b(labels.tobytes(), digest_size=16).digest(),
+               sig)
+        fold = topo.fold_get(key)
         if fold is None:
-            fold = build_fold(plan, labels)
-            self.topology.fold_put(key, fold)
+            fold = build_fold(plan, labels, link_seed=link_seed)
+            topo.fold_put(key, fold)
         return fold
 
     # -- generic transfer lists (tests, calibration, ad-hoc patterns) --------
@@ -210,7 +295,9 @@ class Network:
         starts = np.array([tr.start for tr in transfers], dtype=float)
         words = np.array([max(tr.words, 0.0) for tr in transfers], dtype=float)
         lats = np.array([tr.latency for tr in transfers], dtype=float)
-        paths = [self.topology.route(tr.src, tr.dst) for tr in transfers]
+        t0 = float(starts.min())
+        topo = self._topology_at(t0)
+        paths = [topo.route(tr.src, tr.dst) for tr in transfers]
         lens = np.fromiter((len(pa) for pa in paths), dtype=np.int64, count=T)
         indptr = np.zeros(T + 1, dtype=np.int64)
         np.cumsum(lens, out=indptr[1:])
@@ -219,15 +306,26 @@ class Network:
         owner = np.repeat(np.arange(T, dtype=np.int64), lens)
         if self.engine == "reference":
             nl = int(flat.max()) + 1 if flat.size else 1
+            dense = None
+            if flat.size:
+                uniq_l = np.unique(flat)
+                s = self._link_scales(uniq_l, t0)
+                if s is not None:
+                    dense = np.ones(nl)
+                    dense[uniq_l] = s
             return self._deliver_reference(starts, words, lats, owner, flat,
-                                           nl, lens)
+                                           nl, lens, link_scales=dense)
         self.events += 2 * T
         uniq, link_idx = np.unique(flat, return_inverse=True)
         link_idx = link_idx.astype(np.int64).ravel()
+        scales = self._link_scales(uniq, t0) if uniq.size else None
         if flat.size == 0 or int(np.bincount(link_idx).max()) <= 1:
             # collision-free even with every transfer active: ideal times
             self.stats.add(flat, words[owner], self.beta * words[owner], 1)
-            return starts + lats + self.beta * words
+            if scales is None:
+                return starts + lats + self.beta * words
+            bneck = self._route_bneck(indptr, link_idx, scales, T)
+            return starts + lats + self.beta * words * bneck
         done = np.empty(T)
         live = words > 0.0
         done[~live] = starts[~live] + lats[~live]
@@ -255,27 +353,40 @@ class Network:
             max_static_load=int(static.max()) if static.size else 0)
         seeds = np.unique(np.column_stack([starts[idx_map], words[idx_map]]),
                           axis=0, return_inverse=True)[1]
-        fold = build_fold(plan, seeds.astype(np.int64).ravel()) if self.fold \
+        sub_scales = scales if sub_uniq is uniq \
+            else self._link_scales(sub_uniq, t0)
+        link_seed = None
+        if sub_scales is not None:
+            link_seed = np.unique(sub_scales, return_inverse=True)[1]
+            link_seed = link_seed.astype(np.int64).ravel()
+        fold = build_fold(plan, seeds.astype(np.int64).ravel(),
+                          link_seed=link_seed) if self.fold \
             else trivial_fold(plan.p, sub_ptr, sub_idx, sub_owner,
                               sub_uniq.size)
+        scale_m = self._fold_scales(fold, sub_scales)
         done_k = self._solve(starts[idx_map][fold.rep],
-                             words[idx_map][fold.rep], fold, sub_uniq)
+                             words[idx_map][fold.rep], fold, sub_uniq,
+                             scale_m)
         done[idx_map] = done_k[fold.t_class] + lats[idx_map]
         return done
 
     # -- the folded fluid event loop -----------------------------------------
     def _solve(self, starts: np.ndarray, words: np.ndarray,
-               fold: Fold, uniq_links: np.ndarray) -> np.ndarray:
+               fold: Fold, uniq_links: np.ndarray,
+               scale_m: Optional[np.ndarray] = None) -> np.ndarray:
         """Fluid completion times per class (latency excluded).  One event
         per change of the active class set; between events every class
-        rate is constant, so the advance is exact."""
+        rate is constant, so the advance is exact.  ``scale_m`` multiplies
+        the effective load per link *class* (degraded-link injection); raw
+        loads still feed the peak/stats accounting."""
         K, M = fold.K, fold.M
         row_m, row_a, entry_k = fold.row_m, fold.row_a, fold.entry_k
         starts_ok = fold.nonempty  # classes with a route
         if K == 1:
             # one class in lockstep: a single fluid interval at the static
             # bottleneck — the event loop closed-form
-            bneck = max(float(row_a.max()) if row_a.size else 1.0, 1.0)
+            ra = row_a if scale_m is None else row_a * scale_m[row_m]
+            bneck = max(float(ra.max()) if ra.size else 1.0, 1.0)
             w = float(words[0])
             dur = w * self.beta * bneck
             words_dep = np.zeros(M)
@@ -309,10 +420,11 @@ class Network:
             loads = np.bincount(row_m, weights=row_a * act[entry_k],
                                 minlength=M)
             np.maximum(peak_m, loads, out=peak_m)
+            eff = loads if scale_m is None else loads * scale_m
             bneck = np.ones(K)
             if starts_ok.any():
                 seg_starts = fold.row_ptr[:-1][starts_ok]
-                bneck[starts_ok] = np.maximum.reduceat(loads[row_m],
+                bneck[starts_ok] = np.maximum.reduceat(eff[row_m],
                                                        seg_starts)
             bneck = np.maximum(bneck, 1.0)
             fin = np.where(active, t + rem * (beta * bneck), np.inf)
@@ -345,25 +457,47 @@ class Network:
         return done
 
     # -- the PR-3 per-transfer engine (agreement oracle) ---------------------
-    def _reference_from_plan(self, starts, words, lats,
-                             plan: ShiftPlan) -> np.ndarray:
+    def _reference_from_plan(self, starts, words, lats, plan: ShiftPlan,
+                             scales_u=None) -> np.ndarray:
         nl = int(plan.links.max()) + 1 if plan.links.size else 1
         if plan.links.size == 0 or plan.max_static_load <= 1:
             self.events += 2 * plan.p
-            done = starts + lats + self.beta * words
+            if scales_u is None:
+                done = starts + lats + self.beta * words
+            else:
+                b = self._route_bneck(plan.indptr, plan.link_idx,
+                                      scales_u, plan.p)
+                done = starts + lats + self.beta * words * b
             self.stats.add(plan.links, words[plan.owner],
                            self.beta * words[plan.owner], 1)
             return done
+        dense = None
+        if scales_u is not None:
+            dense = np.ones(nl)
+            dense[plan.uniq_links] = scales_u
         return self._deliver_reference(starts, words, lats, plan.owner,
-                                       plan.links, nl, np.diff(plan.indptr))
+                                       plan.links, nl, np.diff(plan.indptr),
+                                       link_scales=dense)
 
-    def _deliver_reference(self, starts, words, lats, owner, flat, nl, plen):
+    def _deliver_reference(self, starts, words, lats, owner, flat, nl, plen,
+                           link_scales=None):
         """The pre-fold engine, one event per active-set change over
-        individual transfers — kept as the cross-validation oracle."""
+        individual transfers — kept as the cross-validation oracle.
+        ``link_scales`` is a dense per-physical-link effective-load
+        multiplier (degraded-link injection)."""
         T = starts.size
         if flat.size == 0 or int(np.bincount(flat, minlength=nl).max()) <= 1:
             self.events += 2 * T
-            done = starts + lats + self.beta * words
+            if link_scales is None:
+                done = starts + lats + self.beta * words
+            else:
+                b = np.ones(T)
+                routed = plen > 0
+                if routed.any():
+                    offs = np.concatenate(
+                        ([0], np.cumsum(plen[routed])))[:-1]
+                    b[routed] = np.maximum.reduceat(link_scales[flat], offs)
+                done = starts + lats + self.beta * words * np.maximum(b, 1.0)
             self.stats.add(flat, words[owner], self.beta * words[owner], 1)
             return done
         done = np.full(T, np.inf)
@@ -392,8 +526,9 @@ class Network:
             amask = active[owner]
             loads = np.bincount(flat[amask], minlength=nl)
             np.maximum(link_peak, loads, out=link_peak)
+            eff = loads if link_scales is None else loads * link_scales
             bottleneck = np.ones(T)
-            bottleneck[routed] = np.maximum.reduceat(loads[flat], offsets)
+            bottleneck[routed] = np.maximum.reduceat(eff[flat], offsets)
             bottleneck = np.maximum(bottleneck, 1.0)
             rate = np.where(active, 1.0 / (self.beta * bottleneck), 0.0)
             fin = np.where(active, t + rem * (self.beta * bottleneck), np.inf)

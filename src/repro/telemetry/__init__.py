@@ -18,6 +18,10 @@ those predictions:
   drift.py      rolling per-op relative error; crossing the threshold
                 bumps Machine.revision, changing the fingerprint and so
                 retiring every stale tuner plan-cache entry
+  diagnose.py   fault localization: shift-pattern probes score links by
+                the lateness of ranks routed over them; the winning
+                hypothesis is emitted as a *degraded* machine revision
+                whose surface carries an injectable FaultSpec
   report.py     the paper's accuracy tables (mean/max relative error per
                 algorithm) as a living report, JSON-saved for CI gates
 
@@ -35,6 +39,10 @@ from .refit import KernelRefitResult, RefitResult, refit, refit_kernels
 from .drift import (DEFAULT_THRESHOLD, DEFAULT_WINDOW, DriftLatch,
                     DriftStatus, bump_revision, check,
                     detect_and_invalidate, reset_latch)
+from .diagnose import (Diagnosis, DiagnosisResponder,
+                       default_probe_distances, emit_degraded_profile,
+                       localize_link, localize_rank, probe_links,
+                       probe_shift_durations)
 from .report import accuracy_report, format_report, save_report
 
 __all__ = [
@@ -46,5 +54,9 @@ __all__ = [
     "KernelRefitResult", "RefitResult", "refit", "refit_kernels",
     "DEFAULT_THRESHOLD", "DEFAULT_WINDOW", "DriftLatch", "DriftStatus",
     "bump_revision", "check", "detect_and_invalidate", "reset_latch",
+    "Diagnosis", "DiagnosisResponder", "default_probe_distances",
+    "emit_degraded_profile",
+    "localize_link", "localize_rank", "probe_links",
+    "probe_shift_durations",
     "accuracy_report", "format_report", "save_report",
 ]

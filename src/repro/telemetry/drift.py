@@ -147,7 +147,8 @@ def bump_revision(registry, machine_name: str) -> Machine:
     machine = dataclasses.replace(surface.machine,
                                   revision=surface.machine.revision + 1)
     registry.register_machine(machine, surface.efficiency,
-                              surface.calibration, overwrite=True)
+                              surface.calibration, overwrite=True,
+                              faults=getattr(surface, "faults", None))
     return machine
 
 

@@ -4,7 +4,8 @@ monitoring and restartable loops."""
 
 from .checkpoint import latest_step, restore, save
 from .data import DataConfig, DataPipeline
-from .fault import (FaultInjector, RestartableLoop, RestartPolicy,
+from .fault import (FaultInjector, RecoveryDecision, RecoveryPlanner,
+                    RescheduleRequested, RestartableLoop, RestartPolicy,
                     StragglerConfig, StragglerMonitor)
 from .optimizer import AdamState, AdamWConfig, adamw_update, init_adamw
 from .trainer import TrainConfig, Trainer, make_train_step

@@ -144,6 +144,16 @@ class Tuner:
         platform = platform or "cpu"
         device_kind = device_kind or platform
         machine = machine or machine_for_platform(platform)
+        # A degraded surface (diagnosis attached a FaultSpec) demands the
+        # simulator: only the per-rank engine sees link granularity, so
+        # closed-form-only planning would ignore the fault entirely.
+        try:
+            _surface = self.registry.machine(machine)
+        except KeyError:
+            _surface = None
+        if refine is None and _surface is not None \
+                and getattr(_surface, "faults", None) is not None:
+            refine = "sim"
         if local_kernel not in (None, "pallas", "jnp"):
             raise ValueError(f"local_kernel must be 'pallas' or 'jnp', "
                              f"got {local_kernel!r}")
@@ -247,7 +257,7 @@ class Tuner:
         sim_extra: Optional[Dict[str, float]] = None
         if refine == "sim":
             j, sim_extra = self._sim_rerank(cands, totals, machine, n,
-                                            shortlist)
+                                            shortlist, device_count)
         else:
             j = int(np.argmin(totals))
         algo, variant, p, c, g = cands[j]
@@ -275,17 +285,29 @@ class Tuner:
             fingerprint=fp, predicted=predicted, tiles=tiles)
 
     def _sim_rerank(self, cands, totals, machine: str, n: int,
-                    shortlist: int) -> Tuple[int, Dict[str, float]]:
+                    shortlist: int, device_count: Optional[int] = None
+                    ) -> Tuple[int, Dict[str, float]]:
         """The opt-in second planning stage: replay the closed-form top-k
         candidates through the per-rank discrete-event simulator on the
         machine's topology and pick the one with the smallest *simulated*
         makespan.  The whole shortlist goes through one
         ``simulate_programs`` batch so candidates at the same ``p`` share
         route/fold caches.  Returns (winning candidate index,
-        predicted-dict extras)."""
-        from ..sim import simulate_programs
+        predicted-dict extras).
+
+        When the surface carries a diagnosed :class:`FaultSpec`, every
+        candidate simulates on ONE topology — the full device pool's —
+        so the fault's physical link ids mean the same thing for every
+        grid (candidates use different ``p``), the fault is injected into
+        each run, and a candidate rendered unreachable by dead links is
+        skipped rather than sinking the batch."""
+        from ..sim import simulate_programs, topology_for
         surface = self.registry.machine(machine)
         ctx = surface.context()
+        faults = getattr(surface, "faults", None)
+        topo = None
+        if faults is not None and device_count is not None:
+            topo = topology_for(surface.machine, device_count)
         order = np.argsort(totals)[:max(1, int(shortlist))]
         picked = [int(j) for j in order
                   if self.registry.has_program(*cands[int(j)][:2])]
@@ -294,13 +316,16 @@ class Tuner:
         scens = [{"n": float(n), "p": cands[j][2], "c": cands[j][3], "r": 1}
                  for j in picked]
         sims = simulate_programs(programs, ctx, scens,
-                                 machine=surface.machine)
+                                 machine=surface.machine, topology=topo,
+                                 faults=faults, strict=(faults is None))
         with self._lock:
             self.stats["sim_evals"] = self.stats.get("sim_evals", 0) \
                 + len(sims)
         best_j, best_t = int(order[0]), float("inf")
         extras: Dict[str, float] = {}
         for j, sim in zip(picked, sims):
+            if sim is None:
+                continue  # e.g. unreachable under dead links
             algo, variant, p, c, _g = cands[j]
             extras[f"sim/{algo}/{variant}@p{p}c{c}"] = float(sim.total)
             if sim.total < best_t:

@@ -42,11 +42,20 @@ from ..perf.models import PROGRAMS
 class MachineSurface:
     """Everything needed to evaluate models for one machine: the constants,
     the local-routine efficiency curves (paper Fig. 1) and the contention
-    calibration (paper Figs. 3-4)."""
+    calibration (paper Figs. 3-4).
+
+    ``faults`` is an optional :class:`repro.sim.faults.FaultSpec` (typed
+    loosely to keep this module free of a sim import): a *degraded* surface
+    emitted by diagnosis carries the localized fault here, and the tuner's
+    sim-refined planning stage injects it into every candidate simulation.
+    It deliberately lives outside :class:`~repro.core.machine.Machine` —
+    the machine fingerprint (and thus plan-cache keys) changes via the
+    revision bump that accompanies every degraded-profile emission."""
 
     machine: Machine
     efficiency: Mapping[str, EfficiencyCurve]
     calibration: Calibration
+    faults: Optional[object] = None
 
     def context(self, calibration: Optional[Calibration] = None) -> alg.AlgoContext:
         cal = calibration if calibration is not None else self.calibration
@@ -95,11 +104,13 @@ class PerfModelRegistry:
     def register_machine(self, machine: Machine,
                          efficiency: Mapping[str, EfficiencyCurve],
                          calibration: Optional[Calibration] = None,
-                         *, overwrite: bool = False) -> None:
+                         *, overwrite: bool = False,
+                         faults=None) -> None:
         if machine.name in self._machines and not overwrite:
             raise ValueError(f"machine {machine.name!r} already registered")
         self._machines[machine.name] = MachineSurface(
-            machine, efficiency, calibration or ParametricCalibration())
+            machine, efficiency, calibration or ParametricCalibration(),
+            faults=faults)
 
     # -- queries -------------------------------------------------------------
     def algos(self) -> Tuple[str, ...]:

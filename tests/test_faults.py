@@ -1,0 +1,326 @@
+"""Fault & degradation injection: faulted-engine agreement against the
+per-transfer reference oracle, dead-link rerouting, onset semantics, the
+detect -> diagnose -> re-plan loop, and serving overload robustness."""
+
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.perf import PROGRAMS
+from repro.sim import (Crossbar, DeadLink, DegradedLink, FaultSpec,
+                       FaultyTopology, Network, SlowRank, Torus,
+                       UnreachableError, simulate_program, simulate_programs,
+                       topology_for, torus_link)
+from repro.telemetry import (Diagnosis, emit_degraded_profile, localize_rank,
+                             probe_links)
+from repro.tuner import DEFAULT_REGISTRY, Tuner
+from repro.tuner.registry import build_default_registry
+
+TOL = 1e-6
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return DEFAULT_REGISTRY.context("hopper-cray-xe6")
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return DEFAULT_REGISTRY.machine("hopper-cray-xe6").machine
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(b), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSpec:
+    def test_empty_and_fingerprint(self):
+        assert FaultSpec().empty
+        fs = FaultSpec(degraded_links=(DegradedLink(3, 4.0),))
+        assert not fs.empty
+        assert fs.fingerprint() != FaultSpec().fingerprint()
+        assert fs.fingerprint() == FaultSpec(
+            degraded_links=(DegradedLink(3, 4.0),)).fingerprint()
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DegradedLink(0, 0.5)          # a degraded link can't be faster
+        with pytest.raises(ValueError):
+            SlowRank(0, 0.0)
+
+    def test_link_scales_respect_onset(self):
+        fs = FaultSpec(degraded_links=(DegradedLink(2, 4.0, onset_s=10.0),))
+        links = np.array([1, 2, 3])
+        assert fs.link_scales(links, 0.0) is None     # not yet active
+        sc = fs.link_scales(links, 10.0)
+        assert sc is not None and sc[1] == 4.0 and sc[0] == sc[2] == 1.0
+
+    def test_compute_scales_per_rank_onset(self):
+        fs = FaultSpec(slow_ranks=(SlowRank(1, 3.0, onset_s=5.0),))
+        sc = fs.compute_scales(np.array([0.0, 4.0, 6.0]))
+        assert sc is None                              # rank 1 not yet slow
+        sc = fs.compute_scales(np.array([0.0, 5.0, 6.0]))
+        assert sc[1] == 3.0 and sc[0] == sc[2] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Faulted engine vs the per-transfer reference oracle (<= 1e-6)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultedAgreement:
+    @pytest.mark.parametrize("fold", [True, False])
+    def test_degraded_link_and_slow_rank_match_reference(self, ctx, fold):
+        topo = Torus((4, 4, 4))
+        fs = FaultSpec(
+            degraded_links=(DegradedLink(torus_link(topo, 8, 2, +1), 6.0),),
+            slow_ranks=(SlowRank(11, 2.5),))
+        prog = PROGRAMS[("lu", "2d")]
+        kw = dict(n=4096.0, p=64, c=1, faults=fs)
+        vec = simulate_program(prog, ctx, topo, fold=fold, **kw)
+        ref = simulate_program(prog, ctx, topo, engine="reference", **kw)
+        assert _rel(vec.total, ref.total) <= TOL
+        # and the fault actually costs something
+        healthy = simulate_program(prog, ctx, topo, fold=fold,
+                                   n=4096.0, p=64, c=1)
+        assert vec.total > healthy.total
+
+    def test_dead_link_reroute_matches_reference(self, ctx):
+        topo = Torus((4, 4, 4))
+        fs = FaultSpec(dead_links=(DeadLink(torus_link(topo, 5, 0, +1)),))
+        prog = PROGRAMS[("cannon", "2d")]
+        kw = dict(n=2048.0, p=64, c=1, faults=fs)
+        vec = simulate_program(prog, ctx, topo, **kw)
+        ref = simulate_program(prog, ctx, topo, engine="reference", **kw)
+        assert _rel(vec.total, ref.total) <= TOL
+
+    def test_future_onset_equals_healthy(self, ctx):
+        topo = Torus((4, 4, 4))
+        fs = FaultSpec(degraded_links=(
+            DegradedLink(torus_link(topo, 8, 2, +1), 6.0, onset_s=1e9),))
+        prog = PROGRAMS[("summa", "2d")]
+        healthy = simulate_program(prog, ctx, topo, n=2048.0, p=64, c=1)
+        faulted = simulate_program(prog, ctx, topo, n=2048.0, p=64, c=1,
+                                   faults=fs)
+        assert faulted.total == healthy.total
+
+    def test_degraded_crossbar_channel(self, machine):
+        # crossbar channels never collide; the per-route scale path
+        xb = Crossbar(8)
+        link = xb.route(0, 1)[0]
+        fs = FaultSpec(degraded_links=(DegradedLink(link, 5.0),))
+        net = Network(xb, machine.latency, machine.inv_bandwidth, faults=fs)
+        healthy = Network(xb, machine.latency, machine.inv_bandwidth)
+        w = 1e6
+        done_f = net.deliver_shift(np.zeros(8), w, 1, machine.latency)
+        done_h = healthy.deliver_shift(np.zeros(8), w, 1, machine.latency)
+        assert done_f[0] == pytest.approx(
+            machine.latency + 5.0 * w * machine.inv_bandwidth)
+        np.testing.assert_allclose(done_f[1:], done_h[1:], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Dead links: reroute or refuse
+# ---------------------------------------------------------------------------
+
+
+class TestDeadLinks:
+    def test_faulty_topology_reroutes_around_dead_link(self):
+        topo = Torus((4, 4, 4))
+        dead = torus_link(topo, 5, 0, +1)
+        ft = FaultyTopology(topo, frozenset([dead]))
+        route = ft.route(5, 6)
+        assert dead not in route
+        assert len(route) >= len(topo.route(5, 6))   # detour can't be shorter
+
+    def test_both_directions_dead_is_unreachable(self):
+        topo = Torus((2, 2))                 # k=2: only one ring direction
+        dead = {torus_link(topo, 0, 0, +1), torus_link(topo, 0, 0, -1)}
+        ft = FaultyTopology(topo, frozenset(dead))
+        with pytest.raises(UnreachableError):
+            ft.route(0, 1)
+
+    def test_dead_crossbar_channel_is_unreachable(self):
+        xb = Crossbar(4)
+        dead = xb.route(0, 1)[0]
+        ft = FaultyTopology(xb, frozenset([dead]))
+        with pytest.raises(UnreachableError):
+            ft.route(0, 1)
+        assert ft.route(0, 2) == xb.route(0, 2)
+
+    def test_network_strict_false_skips_unreachable(self, ctx):
+        topo = Torus((2, 2))
+        fs = FaultSpec(dead_links=(
+            DeadLink(torus_link(topo, 0, 0, +1)),
+            DeadLink(torus_link(topo, 0, 0, -1))))
+        prog = PROGRAMS[("cannon", "2d")]
+        out = simulate_programs(prog, ctx, [{"n": 512.0, "p": 4, "c": 1}],
+                                topology=topo, faults=fs, strict=False)
+        assert out[0] is None
+
+
+# ---------------------------------------------------------------------------
+# Detect -> diagnose -> re-plan (the ISSUE's end-to-end criterion)
+# ---------------------------------------------------------------------------
+
+
+class TestDiagnoseReplan:
+    def test_probe_localizes_injected_link(self, machine):
+        topo = topology_for(machine, 64)
+        link = torus_link(topo, 8, 2, +1)
+        fs = FaultSpec(degraded_links=(DegradedLink(link, 8.0),))
+        measured = Network(topo, machine.latency, machine.inv_bandwidth,
+                           faults=fs)
+        diag = probe_links(measured)
+        assert diag.kind == "degraded_link"
+        assert diag.component == link
+        assert 2.0 < diag.severity <= 8.0
+
+    def test_probe_healthy_network_stays_healthy(self, machine):
+        topo = topology_for(machine, 64)
+        net = Network(topo, machine.latency, machine.inv_bandwidth)
+        assert probe_links(net).healthy
+
+    def test_localize_rank(self):
+        times = np.ones(16)
+        times[7] = 4.0
+        d = localize_rank(times)
+        assert d.kind == "slow_rank" and d.component == 7
+        assert localize_rank(np.ones(16)).healthy
+
+    def test_degraded_profile_replan_beats_stale_plan(self):
+        # full loop on a private registry: inject -> probe -> emit degraded
+        # revision -> tuner cache-misses and picks a plan that routes
+        # around the sick link -> the new plan beats the stale one when
+        # both are simulated under the fault
+        reg = build_default_registry()
+        surf = reg.machine("hopper-cray-xe6")
+        topo = topology_for(surf.machine, 64)
+        link = torus_link(topo, 8, 2, +1)
+        fs = FaultSpec(degraded_links=(DegradedLink(link, 8.0),))
+        measured = Network(topo, surf.machine.latency,
+                           surf.machine.inv_bandwidth, faults=fs)
+        diag = probe_links(measured)
+        assert diag.component == link
+
+        with tempfile.TemporaryDirectory() as td:
+            tuner = Tuner(registry=reg, plan_dir=td)
+            kw = dict(device_count=64, platform="cpu",
+                      machine="hopper-cray-xe6")
+            healthy = tuner.plan("matmul", 8192, refine="sim", **kw)
+            rev0 = surf.machine.revision
+            mach = emit_degraded_profile(reg, "hopper-cray-xe6",
+                                         diag.to_fault_spec(),
+                                         diagnosis=diag)
+            assert mach.revision == rev0 + 1
+            # refine defaults to "sim" on a faulted surface; the bumped
+            # fingerprint guarantees a cache miss
+            degraded = tuner.plan("matmul", 8192, **kw)
+            assert "sim_total" in degraded.predicted
+            assert ((healthy.algo, healthy.variant, healthy.c)
+                    != (degraded.algo, degraded.variant, degraded.c))
+
+            surf2 = reg.machine("hopper-cray-xe6")
+            totals = {}
+            for name, pl in (("stale", healthy), ("replan", degraded)):
+                sim = simulate_programs(
+                    reg.program(pl.algo, pl.variant), surf2.context(),
+                    [{"n": 8192.0, "p": pl.p, "c": pl.c, "r": 1}],
+                    topology=topology_for(surf2.machine, 64),
+                    faults=diag.to_fault_spec())[0]
+                totals[name] = sim.total
+            assert totals["replan"] < totals["stale"]
+
+    def test_diagnosis_to_fault_spec_roundtrip(self):
+        d = Diagnosis(kind="degraded_link", component=52, severity=7.2)
+        fs = d.to_fault_spec()
+        assert fs.degraded_links[0].link == 52
+        assert fs.degraded_links[0].scale == pytest.approx(7.2)
+        assert Diagnosis(kind="healthy").to_fault_spec().empty
+
+
+# ---------------------------------------------------------------------------
+# Serving robustness: deadlines, bounded queue, graceful degradation
+# ---------------------------------------------------------------------------
+
+
+class TestServingRobustness:
+    @pytest.fixture(scope="class")
+    def cost(self):
+        from repro.configs import get
+        from repro.core.machine import CPU_HOST
+        from repro.serving import cost_model_for
+        return cost_model_for(get("qwen1.5-4b").reduced(), CPU_HOST)
+
+    def test_overload_sheds_and_enforces_deadlines(self, cost):
+        from repro.serving import (SchedulerConfig, TraceConfig,
+                                   replay_traced, synthesize_trace)
+        trace = synthesize_trace(TraceConfig(n_requests=400,
+                                             arrival_rate=200.0, seed=3))
+        trace = [dataclasses.replace(r, deadline_s=2.0) for r in trace]
+        rep, _, reg = replay_traced(trace, cost, policy="model",
+                                    scheduler_cfg=SchedulerConfig(
+                                        max_queue=16),
+                                    degrade=True)
+        assert rep.n_shed > 0
+        assert rep.n_deadline_missed > 0
+        # conservation: every request finished, was shed, or was dropped
+        # waiting at its deadline (active deadline evictions also count
+        # in n_finished — they did run)
+        assert rep.n_finished + rep.n_shed <= len(trace)
+        assert rep.n_finished + rep.n_shed + rep.n_deadline_missed \
+            >= len(trace)
+
+    def test_unbounded_queue_never_sheds(self, cost):
+        from repro.serving import TraceConfig, replay_traced, synthesize_trace
+        trace = synthesize_trace(TraceConfig(n_requests=60,
+                                             arrival_rate=50.0, seed=1))
+        rep, _, _ = replay_traced(trace, cost, policy="model")
+        assert rep.n_shed == 0 and rep.n_deadline_missed == 0
+        assert rep.n_finished == len(trace)
+
+    def test_shedding_keeps_cheapest_predicted(self, cost):
+        from repro.serving import (Request, Scheduler, SchedulerConfig,
+                                   SimBackend, make_policy)
+        sched = Scheduler(SimBackend(), cost,
+                          SchedulerConfig(max_queue=2, max_active=1),
+                          policy=make_policy("model"))
+        # four arrivals against a queue bound of two: the two with the
+        # highest predicted prefill cost are shed, the cheap ones kept
+        for rid, plen in (("run", 8), ("cheap", 4), ("mid", 64),
+                          ("big", 1024)):
+            sched.submit(Request(rid=rid, prompt_len=plen, arrival_s=0.0,
+                                 max_new_tokens=4, output_len=4))
+        sched.step()
+        shed = {rid for rid, rs in sched.finished.items()
+                if rs.finish_reason == "shed"}
+        assert shed == {"big", "mid"}
+
+    def test_degradation_controller_shrinks_to_floor_and_recovers(self):
+        from repro.serving import DegradationController, make_policy
+        pol = make_policy("model", step_budget_s=0.08)
+        ctl = DegradationController(pol, floor_frac=0.25, shrink=0.5,
+                                    recover=2.0)
+        for _ in range(6):
+            ctl.update(["ttft"])
+        assert pol.step_budget_s == pytest.approx(0.02)   # floored
+        assert ctl.degraded
+        for _ in range(6):
+            ctl.update([])
+        assert pol.step_budget_s == pytest.approx(0.08)   # fully recovered
+        assert not ctl.degraded
+        acts = [e["action"] for e in ctl.events]
+        assert "shrink" in acts and "recover" in acts
+
+    def test_degradation_controller_noop_for_fifo(self):
+        from repro.serving import DegradationController, FIFOPolicy
+        ctl = DegradationController(FIFOPolicy())
+        assert ctl.update(["ttft"]) is None
+        assert not ctl.events and not ctl.degraded

@@ -11,7 +11,9 @@ import pytest
 
 from repro.configs import get
 from repro.training import (AdamWConfig, DataConfig, DataPipeline,
-                            FaultInjector, StragglerConfig, StragglerMonitor,
+                            FaultInjector, RecoveryPlanner,
+                            RescheduleRequested, RestartableLoop,
+                            RestartPolicy, StragglerConfig, StragglerMonitor,
                             TrainConfig, Trainer, adamw_update, init_adamw)
 from repro.training import checkpoint as ckpt
 
@@ -126,11 +128,96 @@ class TestFaultTolerance:
         mon = StragglerMonitor(StragglerConfig(window=10, ratio_threshold=2.0,
                                                sustained=2, min_steps=4))
         event = None
-        for i in range(20):
-            dt = 1.0 if i % 7 else 5.0   # periodic straggler
+        # healthy baseline, then a sustained degradation onset (stop while
+        # the window still straddles the onset so cmax/cavg stays > 1)
+        for i in range(16):
+            dt = 1.0 if i < 12 else 5.0
             event = mon.record(dt) or event
         assert event is not None and event["type"] == "straggler"
+        assert event["ratio"] > 2.0
         assert mon.online_cmax_over_cavg > 2.0
+
+    def test_straggler_monitor_ignores_single_spike(self):
+        # one historical spike must not keep firing: the statistic is
+        # latest/median, so the window forgets the spike immediately
+        mon = StragglerMonitor(StragglerConfig(window=10, ratio_threshold=2.0,
+                                               sustained=2, min_steps=4))
+        events = [mon.record(5.0 if i == 6 else 1.0) for i in range(20)]
+        assert all(e is None for e in events)
+
+    def test_straggler_monitor_default_cfg_not_shared(self):
+        a, b = StragglerMonitor(), StragglerMonitor()
+        assert a.cfg is not b.cfg
+
+    def test_restartable_loop_resume_never_replays_history(self):
+        saved = []
+        injector = FaultInjector(fail_at_steps=(7,))
+
+        def step_fn(step):
+            injector.maybe_fail(step)
+            return {"v": step}
+
+        def save_fn(step):
+            saved.append(step)
+
+        def restore_fn():
+            return max((s for s in saved), default=0)
+
+        loop = RestartableLoop(policy=RestartPolicy(max_restarts=2),
+                               checkpoint_every=5)
+        rep = loop.run(n_steps=12, step_fn=step_fn, save_fn=save_fn,
+                       restore_fn=restore_fn)
+        assert rep["steps"] == 12 and rep["restarts"] == 1
+        steps = [h["step"] for h in rep["history"]]
+        assert steps == sorted(set(steps)) == list(range(12))
+
+    def test_restartable_loop_exhausted_restarts_raises(self):
+        class AlwaysFails(RuntimeError):
+            pass
+
+        def step_fn(step):
+            raise AlwaysFails("boom")
+
+        loop = RestartableLoop(policy=RestartPolicy(max_restarts=2))
+        with pytest.raises(AlwaysFails):
+            loop.run(n_steps=4, step_fn=step_fn, save_fn=lambda s: None,
+                     restore_fn=lambda: 0)
+
+    def test_restartable_loop_default_policy_not_shared(self):
+        a, b = RestartableLoop(), RestartableLoop()
+        assert a.policy is not b.policy and a.monitor is not b.monitor
+
+    def test_recovery_planner_decisions(self):
+        pl = RecoveryPlanner(1.0, restart_overhead_s=20.0, checkpoint_s=2.0,
+                             margin=1.25, degraded_threshold=1.5)
+        # mild slowdown, nothing to do
+        assert pl.decide(1.2, 100).action == "continue"
+        # real slowdown but too little work left to pay the migration
+        assert pl.decide(3.0, 5).action == "checkpoint_now"
+        # heavy slowdown with lots of work left: migrating wins clearly
+        d = pl.decide(4.0, 100)
+        assert d.action == "reschedule"
+        assert d.reschedule_s * pl.margin < d.continue_s
+
+    def test_restartable_loop_planner_reschedules_after_checkpoint(self):
+        # drive the monitor with fake times: healthy then 4x degraded
+        mon = StragglerMonitor(StragglerConfig(window=8, ratio_threshold=2.0,
+                                               sustained=2, min_steps=4))
+        times = iter([1.0] * 8 + [4.0] * 20)
+        saved = []
+        loop = RestartableLoop(
+            monitor=mon,
+            planner=RecoveryPlanner(1.0, restart_overhead_s=5.0,
+                                    checkpoint_s=1.0),
+            checkpoint_every=1000)
+        orig = mon.record
+        mon.record = lambda _dt: orig(next(times))
+        with pytest.raises(RescheduleRequested) as ei:
+            loop.run(n_steps=200, step_fn=lambda s: {},
+                     save_fn=saved.append, restore_fn=lambda: 0)
+        assert ei.value.decision.action == "reschedule"
+        assert saved, "must checkpoint before requesting reschedule"
+        assert saved[-1] == ei.value.decision.step
 
     def test_trainer_restart_is_deterministic(self):
         cfg_m = get("qwen1.5-4b").reduced()
